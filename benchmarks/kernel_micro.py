@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: the real Pallas kernels in interpret mode.
+
+Interpret-mode wall time on CPU is NOT TPU performance — these rows exist to
+(a) prove the kernels execute with the production tiling parameters and (b)
+report the analytically-derived TPU-side latency for the same shapes
+(`derived` column = modeled TPU µs from the EB model).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiering
+from repro.core.ebmodel import OpProfile
+from repro.core.hardware import TPU_V5E
+from repro.kernels import ops
+
+Row = tuple[str, float, float]
+
+
+def _time(f, *args, reps=3) -> float:
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    for (m, k, n, ratio) in [(128, 512, 512, 0.25), (256, 512, 1024, 0.5)]:
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        tw = tiering.partition(w, ratio, axis=1, align=128)
+        wall = _time(lambda a, b: ops.tiered_matmul(a, b, window=2), x, tw)
+        op = OpProfile("g", bytes=float(k * n * 4), flops=2.0 * m * k * n)
+        modeled = op.latency(ratio, TPU_V5E)
+        out.append((f"kernel.splitk_gemm.m{m}k{k}n{n}.r{int(ratio*100)}",
+                    wall * 1e6, modeled * 1e6))
+    b, h, kh, hd, s = 4, 8, 2, 64, 512
+    q = jax.random.normal(key, (b, h, hd), jnp.float32)
+    kk = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, hd), jnp.float32)
+    vv = jax.random.normal(jax.random.PRNGKey(3), (b, s, kh, hd), jnp.float32)
+    kv = {"k_local": kk[:2], "v_local": vv[:2], "k_remote": kk[2:], "v_remote": vv[2:]}
+    wall = _time(lambda a: ops.tiered_decode_attention(a, kv, kv_len=s,
+                                                       block_s=128, window=2), q)
+    op = OpProfile("a", bytes=float(b * s * kh * hd * 2 * 4),
+                   flops=4.0 * b * s * h * hd)
+    out.append((f"kernel.splitk_flashattn.b{b}s{s}", wall * 1e6,
+                op.latency(0.5, TPU_V5E) * 1e6))
+    return out

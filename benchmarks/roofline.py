@@ -1,0 +1,56 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun)
+and emits per-cell rows: the three roofline terms, the dominant one, and
+MODEL_FLOPS/HLO_FLOPs.  `derived` column = roofline fraction
+(= t_compute / max(t_compute, t_memory, t_collective): how close the cell is
+to being compute-limited, the score the perf loop drives up).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+Row = tuple[str, float, float]
+
+
+def load_cells(mesh: str = "pod16x16") -> list[dict]:
+    cells = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            cells.append(rec)
+    return cells
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    for rec in load_cells():
+        bound = max(rec["t_compute"], rec["t_memory"], rec["t_collective"])
+        frac = rec["t_compute"] / bound if bound else 0.0
+        out.append((f"roofline.{rec['arch']}.{rec['shape']}.bound_{rec['dominant']}",
+                    bound * 1e6, round(frac, 4)))
+    return out
+
+
+def table(mesh: str = "pod16x16") -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "MODEL_FLOPS | HLO/dev | useful | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        mem_gb = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['t_compute']:.3g} | "
+            f"{rec['t_memory']:.3g} | {rec['t_collective']:.3g} | "
+            f"**{rec['dominant']}** | {rec['model_flops']:.3g} | "
+            f"{rec['flops_per_device']:.3g} | {rec['useful_flops_ratio']:.2f} | "
+            f"{mem_gb:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

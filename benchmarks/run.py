@@ -1,0 +1,44 @@
+"""Benchmark harness entrypoint: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  See per-module docstrings for what
+`derived` means in each section (EB GB/s, speedup, amplification, roofline
+fraction, modeled TPU µs).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig11]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on section name")
+    args = ap.parse_args()
+
+    from benchmarks import fig_benchmarks, kernel_micro, roofline
+
+    sections = {fn.__name__: fn for fn in fig_benchmarks.ALL}
+    sections["kernel_micro"] = kernel_micro.rows
+    sections["roofline"] = roofline.rows
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.3f},{derived:.4f}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# section {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

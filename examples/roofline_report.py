@@ -1,0 +1,12 @@
+"""Print the roofline table from the latest multi-pod dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b --shape decode_32k
+  PYTHONPATH=src python examples/roofline_report.py
+"""
+from benchmarks import roofline
+
+if __name__ == "__main__":
+    print(roofline.table("pod16x16"))
+    print()
+    print("multi-pod (2x16x16):")
+    print(roofline.table("pod2x16x16"))

@@ -1,0 +1,16 @@
+"""END-TO-END DRIVER (the paper's kind is inference): serve a small LM with
+batched requests through the full DAK stack — greedy offload plan, tiered
+weights computed by SplitK_GEMM, batch-split KV attended by
+SplitK_FlashAttn, slot-based continuous batching.
+
+  PYTHONPATH=src python examples/serve_offload.py [--requests 8]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = ["--arch", "llama2_7b", "--smoke", "--requests", "8",
+            "--max-batch", "4", "--prompt-len", "12", "--new-tokens", "6",
+            "--max-len", "48", "--offload-ratio", "0.4"] + sys.argv[1:]
+    main(argv)

@@ -1,0 +1,15 @@
+"""Train a reduced LM end-to-end with the full substrate: synthetic packed
+data -> jitted microbatched train_step -> async checkpoints -> injected
+failure -> automatic restore -> loss keeps improving.
+
+  PYTHONPATH=src python examples/train_e2e.py [--steps 60]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = ["--arch", "qwen3_32b", "--smoke", "--steps", "40", "--batch", "8",
+            "--seq", "128", "--microbatches", "2", "--ckpt-every", "10",
+            "--fail-at", "17", "--lr", "1e-3"] + sys.argv[1:]
+    main(argv)

@@ -1,0 +1,14 @@
+"""DAK core: direct-access tiered-memory offloading (the paper's contribution)."""
+from repro.core import congestion, ebmodel, engine, hardware, multicast, planner, tiering
+from repro.core.ebmodel import OpProfile, WorkloadSpec
+from repro.core.engine import TieringPlan, plan
+from repro.core.hardware import GH200, RTX6000_BLACKWELL, SYSTEMS, TPU_V5E, HardwareSpec
+from repro.core.planner import OffloadPlan, solve, solve_uniform
+from repro.core.tiering import TieredArray, partition, partition_tree
+
+__all__ = [
+    "congestion", "ebmodel", "engine", "hardware", "multicast", "planner", "tiering",
+    "OpProfile", "WorkloadSpec", "TieringPlan", "plan",
+    "GH200", "RTX6000_BLACKWELL", "SYSTEMS", "TPU_V5E", "HardwareSpec",
+    "OffloadPlan", "solve", "solve_uniform", "TieredArray", "partition", "partition_tree",
+]

@@ -1,0 +1,174 @@
+"""OffloadEngine — end-to-end planning (paper §3, Fig. 4).
+
+Given (model config, workload, hardware), the engine:
+  1. enumerates the offloadable operations (linear ops carry weights,
+     attention ops carry KV cache — paper footnote 2),
+  2. computes the memory footprint and the *global* offload ratio
+     ``OR = max(0, 1 − HBM_avail / footprint)``,
+  3. runs the provably-optimal greedy allocator for per-op ratios,
+  4. emits a `TieringPlan`: per-parameter-group offload ratios (by path
+     pattern) + the KV-cache ratio + congestion window + broadcast plan,
+     ready to be applied to a param pytree via `tiering.partition_tree`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import congestion, multicast, planner
+from repro.core.ebmodel import OpProfile, WorkloadSpec, attention_op, linear_op
+from repro.core.hardware import HardwareSpec
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TieringPlan:
+    global_ratio: float
+    op_ratios: dict[str, float]            # op name -> ratio
+    param_ratios: dict[str, float]         # param path pattern -> ratio
+    kv_ratio: float
+    latency: float                         # modelled e2e step latency (s)
+    effective_bandwidth: float             # modelled aggregate EB (bytes/s)
+    window: congestion.WindowPlan
+    broadcast: multicast.BroadcastPlan
+    footprint_bytes: float
+    ops: tuple[OpProfile, ...] = ()
+
+
+# Map op names -> param path patterns used by models/transformer.py params.
+_OP_TO_PARAM = {
+    "attn_qkv": "wq",
+    "attn_out": "wo",
+    "mlp_up": "wi",
+    "mlp_down": "wdown",
+    "moe_experts": "experts",
+    "moe_shared": "shared",
+    "lm_head": "lm_head",
+    "ssm_in": "x_proj",
+    "ssm_out": "ssm_out",
+}
+
+
+def enumerate_ops(cfg: ModelConfig, wl: WorkloadSpec) -> list[OpProfile]:
+    """Offloadable ops for one full forward pass, aggregated over layers.
+
+    Aggregation over layers is exact for the EB/latency model (both C and W
+    scale linearly in n_layers) and keeps the planner input compact.
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nl = cfg.n_layers
+    ops: list[OpProfile] = []
+
+    if cfg.family in ("ssm",):
+        d_inner = cfg.ssm_expand * d
+        n_heads = d_inner // cfg.ssm_head_dim
+        in_w = 2 * d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state + n_heads
+        ops.append(linear_op("ssm_in", d, in_w, wl, nl))
+        ops.append(linear_op("ssm_out", d_inner, d, wl, nl))
+    else:
+        n_attn = nl
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            n_attn = nl // cfg.hybrid_attn_every
+            n_ssm = nl
+            d_inner = cfg.ssm_expand * d
+            n_heads = d_inner // cfg.ssm_head_dim
+            in_w = 2 * d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state + n_heads
+            ops.append(linear_op("ssm_in", d, in_w, wl, n_ssm))
+            ops.append(linear_op("ssm_out", d_inner, d, wl, n_ssm))
+        if cfg.use_mla:
+            q_rank = cfg.q_lora_rank or d
+            qkv_w = (cfg.q_lora_rank + cfg.kv_lora_rank + cfg.rope_head_dim) + (
+                q_rank * cfg.n_heads * (cfg.nope_head_dim + cfg.rope_head_dim)
+            ) // d + (cfg.kv_lora_rank * cfg.n_heads * (cfg.nope_head_dim + cfg.v_head_dim)) // d
+            ops.append(linear_op("attn_qkv", d, qkv_w, wl, n_attn))
+            ops.append(linear_op("attn_out", cfg.n_heads * cfg.v_head_dim, d, wl, n_attn))
+        elif cfg.family != "ssm":
+            qkv_out = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            ops.append(linear_op("attn_qkv", d, qkv_out, wl, n_attn))
+            ops.append(linear_op("attn_out", cfg.n_heads * hd, d, wl, n_attn))
+
+        if cfg.family == "moe":
+            # Routed experts: weights C = all experts; flops only top_k active.
+            e_up = linear_op("moe_experts", d, 3 * cfg.moe_d_ff, wl, nl)
+            c_all = e_up.bytes * cfg.n_experts
+            w_active = e_up.flops * cfg.top_k
+            ops.append(OpProfile("moe_experts", c_all, w_active, "linear"))
+            if cfg.n_shared_experts:
+                sh = linear_op("moe_shared", d, 3 * cfg.moe_d_ff * cfg.n_shared_experts, wl, nl)
+                ops.append(sh)
+        elif cfg.family != "ssm":
+            mult = 2 if cfg.mlp == "swiglu" else 1
+            ops.append(linear_op("mlp_up", d, mult * cfg.d_ff, wl, n_attn))
+            ops.append(linear_op("mlp_down", cfg.d_ff, d, wl, n_attn))
+
+        # KV-cache op (decode/prefill only; encoder fwd has no persistent KV).
+        if cfg.has_decoder and wl.phase in ("decode", "prefill"):
+            if cfg.use_mla:
+                # MLA caches the latent (kv_lora + rope) per token, not heads.
+                kv_width = cfg.kv_lora_rank + cfg.rope_head_dim
+                ops.append(attention_op("attention", 1, kv_width, cfg.n_heads, wl, n_attn))
+            else:
+                ops.append(attention_op(
+                    "attention", cfg.n_kv_heads, hd, cfg.n_heads, wl, n_attn))
+
+    ops.append(linear_op("lm_head", d, cfg.vocab, wl, 1))
+    return ops
+
+
+def kv_cache_bytes(cfg: ModelConfig, wl: WorkloadSpec) -> float:
+    if not cfg.has_decoder or cfg.family == "ssm":
+        return 0.0
+    n_attn = cfg.n_layers
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        n_attn = cfg.n_layers // cfg.hybrid_attn_every
+    if cfg.use_mla:
+        per_tok = cfg.kv_lora_rank + cfg.rope_head_dim
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+    return float(wl.batch) * wl.seq_len * per_tok * wl.dtype_bytes * n_attn
+
+
+def plan(
+    cfg: ModelConfig,
+    wl: WorkloadSpec,
+    hw: HardwareSpec,
+    hbm_budget_bytes: float | None = None,
+    global_ratio: float | None = None,
+    pod_chips: int = 1,
+    dma_chunk_bytes: int = 512 * 1024,
+) -> TieringPlan:
+    """Full DAK planning pass. Either give an HBM budget (paper Fig. 10 mode)
+    or pin the global ratio directly (paper Fig. 8/9 sweep mode)."""
+    ops = enumerate_ops(cfg, wl)
+    weights = cfg.param_count() * wl.dtype_bytes
+    kv = kv_cache_bytes(cfg, wl)
+    footprint = weights + kv
+    if global_ratio is None:
+        budget = hbm_budget_bytes if hbm_budget_bytes is not None else hw.hbm.capacity
+        global_ratio = planner.global_offload_ratio(footprint, budget * pod_chips)
+    sol = planner.solve(ops, global_ratio, hw)
+    op_ratios = {op.name: r for op, r in zip(ops, sol.ratios, strict=True)}
+
+    cong = congestion.CongestionModel(hw)
+    window = congestion.optimal_window(cong, n_streams=max(1, pod_chips), chunk_bytes=dma_chunk_bytes)
+    host_bytes = sum(op.bytes * r for op, r in zip(ops, sol.ratios, strict=True))
+    bcast = multicast.plan_broadcast(
+        host_bytes=host_bytes,
+        group_size=pod_chips,
+        pcie_bw=hw.host.bandwidth,
+        ici_bw_per_chip=hw.ici_link_bw * max(1, hw.ici_links) or hw.host.bandwidth,
+    )
+    total_c = sum(op.bytes for op in ops)
+    return TieringPlan(
+        global_ratio=global_ratio,
+        op_ratios=op_ratios,
+        param_ratios={
+            pat: op_ratios[name] for name, pat in _OP_TO_PARAM.items() if name in op_ratios
+        },
+        kv_ratio=op_ratios.get("attention", 0.0),
+        latency=sol.latency,
+        effective_bandwidth=total_c / sol.latency if sol.latency > 0 else 0.0,
+        window=window,
+        broadcast=bcast,
+        footprint_bytes=footprint,
+        ops=tuple(ops),
+    )

@@ -1,0 +1,88 @@
+"""Analytical baselines the paper compares against (§2.3, §6).
+
+These reproduce the *mechanisms* of the prefetch-based systems so the
+paper's Figures 1/8/9 comparisons can be regenerated from first principles:
+
+  * ``flexgen``       — double-buffered layer-by-layer prefetch through HBM
+                        staging buffers (FlexGen).
+  * ``vllm_prefetch`` — asynchronous block prefetch, finer granularity,
+                        CUDA-graph dispatch (no per-layer launch overhead).
+  * ``vllm_uvm``      — UVM demand paging: 4 KB hardware page faults.
+  * ``direct``        — DAK: concurrent dual-tier streaming (ebmodel).
+
+Shared structure of all copy-based paths: offloaded bytes are written into
+HBM before being read by compute, so (a) HBM carries C + C_off traffic
+instead of C, (b) incoming link writes contend with compute reads, and (c)
+imperfect overlap leaves pipeline bubbles (paper: ~20% on real systems).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.ebmodel import OpProfile, total_latency
+from repro.core.hardware import HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchModel:
+    hw: HardwareSpec
+    hbm_write_contention: float = 1.0   # HBM cost multiplier on staged bytes
+    bubble_fraction: float = 0.20       # paper §1: ~20% real-world penalty
+    launch_overhead: float = 0.0        # per-op CPU launch cost (FlexGen, no CUDA graphs)
+
+    def op_latency(self, op: OpProfile, x: float) -> float:
+        """Copy-based latency for one op at offload ratio x.
+
+        Compute must read all C bytes from HBM; the staged C·x bytes also
+        cross HBM as writes (contention) and cross the link.  Best case the
+        link transfer overlaps the previous op's compute (double buffering),
+        so the bound is max(compute+HBM, link); bubbles inflate the result.
+        """
+        bg, bh = self.hw.hbm.bandwidth, self.hw.host.bandwidth
+        hbm_bytes = op.bytes * (1.0 + self.hbm_write_contention * x)
+        t_local = max(op.t_comp(self.hw), hbm_bytes / bg)
+        t_link = op.bytes * x / bh
+        bubbles = self.bubble_fraction if x > 0 else 0.0   # no offload, no bubbles
+        return max(t_local, t_link) * (1.0 + bubbles) + self.launch_overhead
+
+    def total_latency(self, ops: list[OpProfile], ratios: list[float]) -> float:
+        return sum(self.op_latency(op, x) for op, x in zip(ops, ratios, strict=True))
+
+    def theoretical_bound(self, ops: list[OpProfile], ratios: list[float]) -> float:
+        """Paper Fig. 1 'prefetch theoretical': zero bubbles, zero launch."""
+        zero = dataclasses.replace(self, bubble_fraction=0.0, launch_overhead=0.0)
+        return zero.total_latency(ops, ratios)
+
+
+@dataclasses.dataclass(frozen=True)
+class UVMModel:
+    hw: HardwareSpec
+    page_bytes: int = 4096
+    fault_latency: float = 20e-6        # per-page fault+migration cost
+
+    def effective_link_bw(self) -> float:
+        """Fault-serialized paging: one page per fault-latency window, with
+        modest overlap (4 concurrent fault handlers)."""
+        paged = self.page_bytes / self.fault_latency * 4
+        return min(self.hw.host.bandwidth, paged)
+
+    def op_latency(self, op: OpProfile, x: float) -> float:
+        bg = self.hw.hbm.bandwidth
+        t_local = max(op.t_comp(self.hw), op.bytes * (1.0 - x) / bg)
+        t_page = op.bytes * x / self.effective_link_bw()
+        return t_local + t_page          # faults serialize against compute
+
+    def total_latency(self, ops: list[OpProfile], ratios: list[float]) -> float:
+        return sum(self.op_latency(op, x) for op, x in zip(ops, ratios, strict=True))
+
+
+def direct_latency(ops: list[OpProfile], ratios: list[float], hw: HardwareSpec) -> float:
+    """DAK direct access (re-export for benchmark symmetry)."""
+    return total_latency(ops, ratios, hw)
+
+
+BASELINES = {
+    "flexgen": lambda hw: PrefetchModel(hw, launch_overhead=30e-6),
+    "vllm_prefetch": lambda hw: PrefetchModel(hw, launch_overhead=0.0),
+    "vllm_uvm": lambda hw: UVMModel(hw),
+}

@@ -1,0 +1,148 @@
+"""Tiered arrays — paper §4.1 data partition (Fig. 5a).
+
+A matrix operand is split along one axis into a *local* (HBM) part and a
+*remote* (host) part.  Weights split along the output-row (M) dimension;
+KV caches split along batch (decode) or sequence (long-context split-K).
+
+On a real TPU runtime the remote part is placed with
+``memory_kind="pinned_host"`` so XLA streams it over the host link; on
+backends without host memory-kinds (CPU CI) the placement is carried as
+metadata and the traffic model (`core/ebmodel.py`) does the accounting.
+`TieredArray` is a pytree, so it flows through jit/pjit/scan unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_sizes(dim: int, ratio: float, align: int = 1) -> tuple[int, int]:
+    """(local_rows, remote_rows): remote ≈ ratio·dim rounded to `align`.
+
+    Paper §4.1 "execution wave alignment": tile rows are sized so each
+    partition is a whole number of kernel tiles.
+    """
+    if not 0.0 <= ratio <= 1.0:
+        raise ValueError(f"ratio must be in [0,1], got {ratio}")
+    remote = int(round(dim * ratio / align)) * align
+    remote = min(remote, (dim // align) * align if align > 1 else dim)
+    return dim - remote, remote
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TieredArray:
+    """An operand partitioned across (local HBM, remote host) tiers."""
+
+    local: jax.Array            # rows [0, split) along `axis`
+    remote: jax.Array           # rows [split, dim) along `axis`
+    axis: int = 0
+
+    def tree_flatten(self):
+        return (self.local, self.remote), (self.axis,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], axis=aux[0])
+
+    # -- convenience ------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        s = list(self.local.shape)
+        s[self.axis] += self.remote.shape[self.axis]
+        return tuple(s)
+
+    @property
+    def dtype(self):
+        return self.local.dtype
+
+    @property
+    def ratio(self) -> float:
+        d = self.shape[self.axis]
+        return self.remote.shape[self.axis] / d if d else 0.0
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.local.size * self.local.dtype.itemsize
+                   + self.remote.size * self.remote.dtype.itemsize)
+
+    def materialize(self) -> jax.Array:
+        """Concatenate tiers (reference semantics; tests/oracles only)."""
+        return jnp.concatenate([self.local, self.remote], axis=self.axis)
+
+
+def partition(x: jax.Array, ratio: float, axis: int = 0, align: int = 1) -> TieredArray:
+    """Split `x` along `axis`: trailing `ratio` fraction goes to the host tier."""
+    dim = x.shape[axis]
+    n_local, n_remote = split_sizes(dim, ratio, align)
+    local, remote = jnp.split(x, [n_local], axis=axis)
+    return TieredArray(local=local, remote=remote, axis=axis)
+
+
+def place(t: TieredArray, device: Any | None = None) -> TieredArray:
+    """Pin the remote part to host memory when the backend supports it.
+
+    TPU runtimes expose ``memory_kind='pinned_host'`` shardings; CPU does
+    not, in which case placement is a no-op (tier is tracked logically).
+    """
+    try:
+        dev = device or jax.devices()[0]
+        sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        remote = jax.device_put(t.remote, sharding)
+        return TieredArray(local=t.local, remote=remote, axis=t.axis)
+    except (ValueError, RuntimeError, TypeError):
+        return t
+
+
+def partition_tree(
+    params: Any, ratios: dict[str, float], align: int = 1, axis: int = 0
+) -> Any:
+    """Partition every param whose path matches a ratio entry.
+
+    `ratios` maps '/'-joined key-paths (as produced by
+    ``jax.tree_util.keystr``-lite below) to offload ratios. Params without a
+    matching entry stay untouched (ratio 0 == fully local, no wrapper).
+    """
+
+    def path_str(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    def maybe_split(path, leaf):
+        r = ratios.get(path_str(path))
+        if r is None or r <= 0.0 or not hasattr(leaf, "shape") or leaf.ndim < 2:
+            return leaf
+        return partition(leaf, r, axis=axis, align=align)
+
+    return jax.tree_util.tree_map_with_path(maybe_split, params)
+
+
+def traffic_bytes(t: TieredArray) -> tuple[int, int]:
+    """(local_bytes, remote_bytes) fetched by one full read of the operand."""
+    return (
+        int(t.local.size * t.local.dtype.itemsize),
+        int(t.remote.size * t.remote.dtype.itemsize),
+    )
+
+
+def validate(t: TieredArray) -> None:
+    """Invariants checked by property tests."""
+    assert t.local.dtype == t.remote.dtype, "tier dtype mismatch"
+    ls, rs = list(t.local.shape), list(t.remote.shape)
+    ls.pop(t.axis), rs.pop(t.axis)
+    assert ls == rs, f"non-split dims must match: {t.local.shape} vs {t.remote.shape}"
+
+
+def as_numpy_pair(t: TieredArray) -> tuple[np.ndarray, np.ndarray]:
+    return np.asarray(t.local), np.asarray(t.remote)

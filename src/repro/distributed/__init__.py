@@ -1,0 +1,1 @@
+"""Fault tolerance + distributed-optimization helpers."""

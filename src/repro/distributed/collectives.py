@@ -1,0 +1,71 @@
+"""Distributed-optimization collectives: compression + overlap helpers.
+
+* ``compressed_psum`` — int8-quantized all-reduce with per-tensor scales
+  (for shard_map contexts); cuts gradient all-reduce bytes 4× vs fp32.
+* ``ErrorFeedback`` — residual accumulation so compression error is carried
+  into the next step instead of lost (1-bit/EF-SGD style).
+* ``reduce_scatter_grads`` / ``all_gather_params`` — the FSDP decomposition
+  spelled explicitly so XLA can overlap the reduce-scatter with backward
+  compute and the all-gather with forward compute.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-reduce: quantize locally, psum int32, dequant with the
+    psum'd scale average.  Call inside shard_map."""
+    q, scale = quantize_int8(x.astype(jnp.float32))
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return (total.astype(jnp.float32) * (scale_sum / n)).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """Residual-carrying compression: g_t' = C(g_t + e_t); e_{t+1} = g_t + e_t − g_t'."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any):
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(corrected)
+            deq = dequantize_int8(q, scale)
+            return deq.astype(g.dtype), corrected - deq
+        pairs = jax.tree.map(one, grads, residual)
+        flat, treedef = jax.tree.flatten(pairs, is_leaf=lambda x: isinstance(x, tuple))
+        g2 = jax.tree.unflatten(treedef, [p[0] for p in flat])
+        e2 = jax.tree.unflatten(treedef, [p[1] for p in flat])
+        return g2, e2
+
+
+def reduce_scatter_grads(grads: Any, axis_name: str, axis_index: Any) -> Any:
+    """psum_scatter along the fsdp axis (explicit FSDP grad reduction)."""
+    return jax.tree.map(
+        lambda g: jax.lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
+        if g.ndim >= 1 and g.shape[0] % jax.lax.axis_size(axis_name) == 0
+        else jax.lax.psum(g, axis_name),
+        grads)
+
+
+def all_gather_params(params: Any, axis_name: str) -> Any:
+    return jax.tree.map(
+        lambda p: jax.lax.all_gather(p, axis_name, axis=0, tiled=True), params)

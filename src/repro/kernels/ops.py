@@ -1,0 +1,104 @@
+"""Public jit'd wrappers around the direct-access kernels.
+
+`tiered_matmul` / `tiered_decode_attention` are the drop-in compute ops the
+serving engine uses (the JAX analogue of the paper's SplitK_GEMM /
+SplitK_FlashAttn PyTorch modules).  They handle shape alignment ("execution
+wave alignment", paper §4.1), pick interpret mode automatically off-TPU, and
+fall back to the jnp oracle for shapes the kernels do not cover.
+
+`broadcast_remote` implements pod-level fetch-once-broadcast (the TMA
+multicast analogue, DESIGN.md §2): the host partition is sharded across
+chips, each chip pulls a disjoint slice over its own host link, and slices
+are exchanged over ICI via all-gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiering import TieredArray
+from repro.kernels import ref
+from repro.kernels.splitk_flashattn import DEFAULT_BLOCK_S, splitk_flashattn
+from repro.kernels.splitk_gemm import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+    splitk_gemm,
+)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    r = x.shape[axis] % mult
+    if not r:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - r)
+    return jnp.pad(x, pads)
+
+
+def tiered_matmul(
+    x: jax.Array,                      # [..., K]
+    w: TieredArray | tuple[jax.Array, jax.Array],
+    *,
+    window: int = 2,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = x @ W with W column-partitioned across (HBM, host) tiers."""
+    wl, wr = (w.local, w.remote) if isinstance(w, TieredArray) else w
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n_loc, n_rem = wl.shape[1], wr.shape[1]
+    aligned = (n_loc % block_n == 0) and (n_rem % block_n == 0)
+    if not use_kernel or not aligned:
+        return ref.splitk_gemm_ref(x.reshape(-1, k), wl, wr).reshape(*lead, n_loc + n_rem)
+
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
+    wl_p = _pad_to(wl, 0, block_k)
+    wr_p = _pad_to(wr, 0, block_k)
+    y = splitk_gemm(
+        x2, wl_p, wr_p,
+        block_m=block_m, block_n=block_n, block_k=block_k, window=window,
+        interpret=_interpret_default() if interpret is None else interpret)
+    return y[:m].reshape(*lead, n_loc + n_rem)
+
+
+def tiered_decode_attention(
+    q: jax.Array,                      # [B, H, hd]
+    kv: dict[str, jax.Array],          # k_local/v_local [B_loc,S,Kh,hd], k_remote/v_remote
+    *,
+    kv_len: int,
+    window: int = 2,
+    block_s: int = DEFAULT_BLOCK_S,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    kl, vl = kv["k_local"], kv["v_local"]
+    kr, vr = kv["k_remote"], kv["v_remote"]
+    s = kl.shape[1]
+    if not use_kernel or s % block_s or kr.shape[0] == 0 and kl.shape[0] == 0:
+        return ref.splitk_flashattn_ref(q, kl, vl, kr, vr, kv_len)
+    return splitk_flashattn(
+        q, kl, vl, kr, vr, kv_len=kv_len, block_s=block_s, window=window,
+        interpret=_interpret_default() if interpret is None else interpret)
+
+
+def broadcast_remote(w: TieredArray, axis_name: str) -> jax.Array:
+    """Pod-level fetch-once-broadcast of the host partition (inside shard_map).
+
+    The remote partition arrives sharded along `axis_name` (each chip pulled
+    a disjoint slice over its own host link); one ICI all-gather rebuilds the
+    full host partition on every chip — each byte crossed the host link
+    exactly once (read-amplification 1×, paper §4.3.2).
+    """
+    gathered = jax.lax.all_gather(w.remote, axis_name, axis=w.axis, tiled=True)
+    return jnp.concatenate([w.local, gathered], axis=w.axis)

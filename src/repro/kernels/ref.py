@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the direct-access kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def splitk_gemm_ref(x: jax.Array, w_local: jax.Array, w_remote: jax.Array) -> jax.Array:
+    """y = x @ concat(w_local, w_remote, axis=1) with fp32 accumulation."""
+    w = jnp.concatenate([w_local, w_remote], axis=1)
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def splitk_flashattn_ref(
+    q: jax.Array,            # [B, H, hd]
+    k_local: jax.Array,      # [B_loc, S, Kh, hd]
+    v_local: jax.Array,
+    k_remote: jax.Array,     # [B_rem, S, Kh, hd]
+    v_remote: jax.Array,
+    kv_len: int,
+) -> jax.Array:
+    """Tiered decode attention oracle: standard masked softmax attention over
+    the batch-concatenated cache."""
+    k = jnp.concatenate([k_local, k_remote], axis=0).astype(jnp.float32)
+    v = jnp.concatenate([v_local, v_remote], axis=0).astype(jnp.float32)
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    # group-MAJOR GQA (matches models.layers): q head h -> kv head h % kh
+    qg = q.reshape(b, g, kh, hd).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.einsum("bgkh,bskh->bgks", qg, k)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < kv_len
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgks,bskh->bgkh", probs, v)
+    return out.reshape(b, h, hd).astype(q.dtype)

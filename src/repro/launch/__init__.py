@@ -1,0 +1,1 @@
+"""Mesh, sharding policy, steps, dry-run and drivers."""

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch × shape × mesh) cell ---
+# The two lines above MUST precede any other import (jax locks the device
+# count on first init).  Do not set this flag anywhere else in the repo.
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+import repro.configs as C                                  # noqa: E402
+from repro.configs.base import SHAPES, cell_applicable     # noqa: E402
+from repro.launch import hlo_analysis, hlo_cost, sharding, steps     # noqa: E402
+from repro.launch.mesh import data_axes, axis_size, make_production_mesh  # noqa: E402
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, dtype=jnp.bfloat16,
+               fsdp: bool | None = None, num_microbatches: int | None = None):
+    """Returns (lowered, aux) for one (arch × shape) on `mesh`."""
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+
+    if fsdp is None:
+        # Training always FSDP-shards params (grads/optimizer dominate).
+        # Inference only FSDP-shards when TP-sharded weights don't fit HBM:
+        # FSDP at decode re-gathers every weight every token — pure waste
+        # when the model fits (perf-loop iteration C1, EXPERIMENTS.md §Perf).
+        tp_resident = cfg.param_count() * 2 / mesh.shape["model"]
+        fsdp = shape.step == "train" or tp_resident > 10e9
+
+    p_shapes = steps.params_shapes(cfg, dtype)
+    p_spec = sharding.named(mesh, sharding.param_specs(cfg, p_shapes, mesh, fsdp=fsdp))
+    b_spec = sharding.named(mesh, sharding.batch_specs(cfg, shape, mesh))
+    in_specs = steps.input_specs(cfg, shape, dtype)
+
+    # A5 (perf loop): small models don't earn 16-way TP — train them pure-DP
+    # by re-labelling the same physical devices as a (batch, 1) logical mesh
+    # (zero activation collectives; one gradient all-reduce per step).
+    if (shape.step == "train"
+            and sharding.train_strategy(cfg, mesh) == "zero1"
+            and shape.global_batch % (mesh.size // 4) == 0):
+        # tp=4 keeps SSD/attention transients sharded enough to fit HBM
+        # while cutting TP collectives 4x vs tp=16 (measured sweep: tp=1
+        # -> 30 GB/dev, tp=2 -> 16.6, tp=4 -> 8.7 with bound 5.5s).
+        if "pod" in mesh.axis_names:
+            mesh = jax.make_mesh((2, mesh.size // 8, 4), ("pod", "data", "model"))
+        else:
+            mesh = jax.make_mesh((mesh.size // 4, 4), ("data", "model"))
+        p_spec = sharding.named(mesh, sharding.param_specs(cfg, p_shapes, mesh, fsdp=fsdp))
+        b_spec = sharding.named(mesh, sharding.batch_specs(cfg, shape, mesh))
+
+    with jax.sharding.set_mesh(mesh):
+        if shape.step == "train":
+            strategy = sharding.train_strategy(cfg, mesh)
+            sharded_specs = sharding.param_specs(cfg, p_shapes, mesh, fsdp=True)
+            if strategy == "zero1":
+                p_spec = sharding.named(
+                    mesh, sharding.param_specs(cfg, p_shapes, mesh, fsdp=False))
+            o_shapes = steps.opt_shapes(p_shapes)
+            o_spec = sharding.named(mesh, sharding.opt_specs(sharded_specs))
+            mb = num_microbatches or steps.pick_microbatches(
+                cfg, shape, axis_size(mesh, data_axes(mesh)))
+            fn = steps.make_train_step(
+                cfg, num_microbatches=mb,
+                grad_specs=sharded_specs if strategy == "zero1" else None)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_spec, o_spec, b_spec),
+                out_shardings=(None, p_spec, o_spec, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, in_specs)
+            aux = {"step": "train", "microbatches": mb, "strategy": strategy}
+        elif shape.step == "prefill":
+            c_spec = sharding.named(mesh, sharding.cache_specs(cfg, shape, mesh))
+            fn = steps.make_prefill_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_spec, b_spec),
+                out_shardings=(None, c_spec),
+            )
+            lowered = jitted.lower(p_shapes, in_specs)
+            aux = {"step": "prefill"}
+        else:
+            c_shapes = steps.cache_shapes(cfg, shape, dtype)
+            c_spec = sharding.named(mesh, sharding.cache_specs(cfg, shape, mesh))
+            tok_spec = b_spec["tokens"]
+            fn = steps.make_decode_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_spec, c_spec, tok_spec,
+                              jax.sharding.NamedSharding(
+                                  mesh, jax.sharding.PartitionSpec())),
+                out_shardings=(None, c_spec),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                p_shapes, c_shapes, in_specs["tokens"], in_specs["pos"])
+            aux = {"step": "decode"}
+    aux["params"] = float(cfg.param_count())
+    aux["active_params"] = float(cfg.active_param_count())
+    return lowered, aux
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        lowered, aux = lower_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        xla_cost = hlo_analysis.cost_dict(compiled)
+        mem = hlo_analysis.memory_dict(compiled)
+        cost = hlo_cost.analyze(compiled.as_text())
+        shape = SHAPES[shape_name]
+        cfgN = aux["active_params"]
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.step != "decode" else shape.global_batch)
+        model_flops = (6.0 if shape.step == "train" else 2.0) * cfgN * tokens
+
+        rec.update(
+            status="ok", **aux,
+            chips=chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops_per_device=cost.flops,
+            hbm_bytes_per_device=cost.bytes,
+            collective_bytes_per_device=cost.collective_bytes,
+            collective_by_kind=cost.collective_by_kind,
+            collective_counts=cost.collective_counts,
+            top_dots={k: v for k, v in cost.dot_flops_by_shape.items()},
+            xla_flops_body_once=xla_cost.get("flops", 0.0),
+            memory=mem,
+            model_flops=model_flops,
+        )
+        rl = hlo_analysis.roofline(
+            rec["flops_per_device"], rec["hbm_bytes_per_device"],
+            rec["collective_bytes_per_device"], chips)
+        rec.update(
+            t_compute=rl.t_compute, t_memory=rl.t_memory,
+            t_collective=rl.t_collective, dominant=rl.dominant,
+            useful_flops_ratio=(model_flops / max(1.0, rl.flops)),
+        )
+    except SkipCell as e:
+        rec.update(status="skip", reason=str(e))
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="DAK multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    archs = C.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                rec = run_cell(arch, shape_name, multi_pod, out_dir)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skip"
+                n_err += tag == "error"
+                msg = (f"[{tag:5s}] {arch:20s} {shape_name:12s} "
+                       f"{'2x16x16' if multi_pod else '16x16':8s} "
+                       f"wall={rec['wall_s']:7.1f}s")
+                if tag == "ok":
+                    msg += (f" dominant={rec['dominant']:10s}"
+                            f" mem/dev={rec['memory'].get('temp_size_in_bytes', 0)/1e9:6.2f}GB"
+                            f" useful={rec['useful_flops_ratio']:.2f}")
+                if tag == "error":
+                    msg += " " + rec["error"][:120]
+                print(msg, flush=True)
+    print(f"dry-run done: ok={n_ok} skip={n_skip} err={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Compiled-HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic —
+that is parsed from the compiled module text by summing the shapes on every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction.  SPMD HLO shapes are per-device, so the
+parsed totals are per-device traffic; all-reduce counts 2× (ring
+reduce+broadcast phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# one shape literal like bf16[2,128,4096]{2,1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_DONE_RE = re.compile(r"(all-gather|all-reduce|all-to-all|collective-permute|reduce-scatter)-done")
+
+_TRAFFIC_FACTOR = {  # per-device bytes moved per payload byte (ring algos)
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-reduce": 2.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        """Per-device traffic bytes (factors applied)."""
+        return sum(_TRAFFIC_FACTOR[k] * v for k, v in self.bytes_by_kind.items())
+
+    @property
+    def raw_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        types, kind = m.group(1), m.group(2)
+        if _DONE_RE.search(m.group(0)):
+            continue
+        # for all-gather the result is the gathered (larger) buffer; for
+        # reduce-scatter the operand is larger — take the max shape on the
+        # line as the payload (roofline-grade approximation).
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        payload = max(_shape_bytes(types), _shape_bytes(line[m.end() - m.start():]))
+        by_kind[kind] += payload
+        counts[kind] += 1
+    return CollectiveStats(dict(by_kind), dict(counts))
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-step roofline terms (seconds) on the target system."""
+
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float                 # total HLO flops (all chips)
+    hbm_bytes: float             # total HLO bytes accessed (all chips)
+    collective_bytes: float      # total traffic (all chips)
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def roofline(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+    chips: int,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    ici_bw_per_chip: float = 2 * 50e9,   # 2 links engaged per axis transfer
+) -> RooflineTerms:
+    return RooflineTerms(
+        t_compute=flops_per_device / peak_flops,
+        t_memory=bytes_per_device / hbm_bw,
+        t_collective=coll_bytes_per_device / ici_bw_per_chip,
+        flops=flops_per_device * chips,
+        hbm_bytes=bytes_per_device * chips,
+        collective_bytes=coll_bytes_per_device * chips,
+        chips=chips,
+    )
+
+
+def cost_dict(compiled) -> dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def memory_dict(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

@@ -1,0 +1,239 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once, which
+undercounts scanned (layers × microbatches) models by orders of magnitude.
+This module re-derives roofline inputs from ``compiled.as_text()``:
+
+  * walks the computation call graph from ENTRY,
+  * multiplies while bodies by their ``backend_config known_trip_count``,
+  * counts dot FLOPs (2 · |out| · |contracting|),
+  * counts top-level instruction I/O bytes (fusion/reduce bodies are
+    excluded — their traffic is the fusion instruction's operands+result),
+  * accumulates collective payload bytes by kind.
+
+All shapes in SPMD modules are per-device, so every total is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(ROOT\s+)?%?([\w.\-]+)\s+=\s+(\(?[a-z0-9].*?\)?)\s+([a-z][\w\-]*)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_BYTES_SKIP = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+_COLL_KINDS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+_TRAFFIC_FACTOR = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                   "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _first_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str      # operands + attributes (remainder of the line)
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: float                  # with ring factors applied
+    collective_by_kind: dict[str, float]
+    collective_counts: dict[str, int]
+    dot_flops_by_shape: dict[str, float]
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Instr]], str, dict[str, str]]:
+    comps: dict[str, list[Instr]] = {}
+    shapes: dict[str, str] = {}
+    entry = ""
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            name = h.group(1)
+            comps[name] = cur = []
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        ins = Instr(m.group(2), m.group(3), m.group(4), m.group(5),
+                    is_root=bool(m.group(1)))
+        cur.append(ins)
+        shapes[ins.name] = ins.type_str
+    return comps, entry, shapes
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry, shapes = parse_module(text)
+    # computations called as fusion/reduce bodies are "inlined": their
+    # instruction I/O is not HBM traffic (the caller's operands/result are).
+    inlined: set[str] = set()
+    fusion_body: dict[str, dict] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode in ("fusion", "reduce", "reduce-window", "scatter",
+                              "select-and-scatter", "sort", "map", "all-reduce",
+                              "reduce-scatter"):
+                for c in _CALLED_RE.findall(ins.rest):
+                    inlined.add(c)
+    for name, instrs in comps.items():
+        ops_set = {i.opcode for i in instrs}
+        roots = [i for i in instrs if i.is_root]
+        root = roots[0] if roots else (instrs[-1] if instrs else None)
+        # A fusion whose body updates a slice of a same-shaped buffer is an
+        # in-place update of a loop-carried buffer (KV cache), even when the
+        # CPU backend wraps the DUS in dtype round-trips (convert(DUS(...))).
+        dus_update = 0
+        dus_full_dims: list[int] | None = None
+        for i in instrs:
+            if i.opcode == "dynamic-update-slice":
+                names = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+                if len(names) > 1:
+                    dus_update = _shape_bytes(shapes.get(names[1], ""))
+                    dus_full_dims = _first_dims(i.type_str)
+        root_dims = _first_dims(root.type_str) if root is not None else []
+        fusion_body[name] = {
+            "has_reduce": bool(ops_set & {"reduce", "dot", "reduce-window"}),
+            "root_dus_update": dus_update if dus_full_dims == root_dims else 0,
+        }
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll_b: dict[str, float] = defaultdict(float)
+    coll_n: dict[str, int] = defaultdict(int)
+    dot_by_shape: dict[str, float] = defaultdict(float)
+
+    def instr_operand_bytes(ins: Instr) -> int:
+        # operand list = %names before the closing paren of the call
+        args = ins.rest.split(")", 1)[0]
+        return sum(_shape_bytes(shapes.get(n, ""))
+                   for n in _OPERAND_RE.findall(args))
+
+    def instr_bytes(ins: Instr) -> int:
+        """HBM traffic estimate for one instruction.
+
+        In-place update ops (DUS / scatter) only touch the update region —
+        counting the whole loop-carried buffer (KV caches!) as operand +
+        result would overstate traffic by orders of magnitude.  Slicing ops
+        only read the slice.  Fusions are body-aware: a DUS-rooted fusion is
+        an in-place update; a slice/elementwise fusion can't read more than
+        it writes per operand (caps whole-cache operands at the slice size);
+        reduction/dot fusions legitimately read more than they write.
+        """
+        res = _shape_bytes(ins.type_str)
+        if ins.opcode in ("dynamic-update-slice", "scatter"):
+            args = ins.rest.split(")", 1)[0]
+            names = _OPERAND_RE.findall(args)
+            upd = _shape_bytes(shapes.get(names[1], "")) if len(names) > 1 else 0
+            return 2 * upd
+        if ins.opcode in ("dynamic-slice", "gather", "slice", "concatenate",
+                          "broadcast", "reshape", "reverse", "pad"):
+            return 2 * res
+        if ins.opcode == "fusion":
+            called = _CALLED_RE.findall(ins.rest)
+            info = fusion_body.get(called[0], {}) if called else {}
+            if info.get("root_dus_update"):
+                return 2 * info["root_dus_update"]
+            args = ins.rest.split(")", 1)[0]
+            op_bytes = [_shape_bytes(shapes.get(n, ""))
+                        for n in _OPERAND_RE.findall(args)]
+            if info.get("has_reduce"):
+                return res + sum(op_bytes)
+            return res + sum(min(b, res) for b in op_bytes)
+        return res + instr_operand_bytes(ins)
+
+    def walk(comp: str, mult: float, count_bytes: bool) -> None:
+        nonlocal flops, bytes_
+        for ins in comps.get(comp, []):
+            if ins.opcode == "while":
+                trip = 1
+                t = _TRIP_RE.search(ins.rest)
+                if t:
+                    trip = int(t.group(1))
+                called = _CALLED_RE.findall(ins.rest)
+                for c in called:
+                    walk(c, mult * trip, count_bytes=True)
+                # while's own tuple shuffling is ~free; skip its I/O
+                continue
+            if ins.opcode in ("fusion", "call", "conditional"):
+                for c in _CALLED_RE.findall(ins.rest):
+                    walk(c, mult, count_bytes=False)
+            if ins.opcode == "dot":
+                out = 1
+                for d in _first_dims(ins.type_str):
+                    out *= d
+                contract = 1
+                cd = _CDIMS_RE.search(ins.rest)
+                lhs_names = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+                if cd and lhs_names:
+                    lhs_dims = _first_dims(shapes.get(lhs_names[0], ""))
+                    for i in cd.group(1).split(","):
+                        if i and int(i) < len(lhs_dims):
+                            contract *= lhs_dims[int(i)]
+                flops += mult * 2.0 * out * contract
+                dot_by_shape[ins.type_str] += mult * 2.0 * out * contract
+            if ins.opcode in _COLL_KINDS:
+                payload = max(_shape_bytes(ins.type_str), instr_operand_bytes(ins))
+                coll_b[ins.opcode] += mult * payload * _TRAFFIC_FACTOR[ins.opcode]
+                coll_n[ins.opcode] += int(mult)
+            if count_bytes and ins.opcode not in _BYTES_SKIP \
+                    and comp not in inlined:
+                bytes_ += mult * instr_bytes(ins)
+
+    walk(entry, 1.0, count_bytes=True)
+    return HloCost(
+        flops=flops,
+        bytes=bytes_,
+        collective_bytes=sum(coll_b.values()),
+        collective_by_kind=dict(coll_b),
+        collective_counts=dict(coll_n),
+        dot_flops_by_shape=dict(
+            sorted(dot_by_shape.items(), key=lambda kv: -kv[1])[:12]),
+    )

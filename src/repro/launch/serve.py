@@ -1,0 +1,59 @@
+"""Serving driver: batched requests through the DAK tiered engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2_7b --smoke \
+      --requests 8 --offload-ratio 0.4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2_7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--offload-ratio", type=float, default=0.4)
+    ap.add_argument("--no-kernels", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+        global_offload_ratio=args.offload_ratio,
+        use_kernels=not args.no_kernels)
+
+    print(f"plan: global={engine.plan.global_ratio:.2f} "
+          f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
+          f"window={engine.plan.window.n_inflight} tiered={engine.tiered}")
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid=rid,
+            prompt=rng.integers(3, cfg.vocab, args.prompt_len).astype(np.int32),
+            max_new_tokens=args.new_tokens))
+    stats = engine.run()
+    wall = time.time() - t0
+    print(f"served {stats.served} requests in {wall:.2f}s | "
+          f"decode steps {stats.decode_steps} | TPOT {stats.tpot*1e3:.1f} ms | "
+          f"prefill {stats.prefill_time:.2f}s")
+    return {"served": stats.served, "tpot": stats.tpot, "wall": wall}
+
+
+if __name__ == "__main__":
+    main()

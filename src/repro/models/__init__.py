@@ -1,0 +1,4 @@
+"""Architecture zoo: config-driven init/forward/prefill/decode."""
+from repro.models.model import decode_step, forward, init_cache, init_params, prefill
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "prefill"]

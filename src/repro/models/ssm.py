@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD, state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked dual form (matmul-dominated, MXU-friendly);
+decode uses the O(1)-state recurrent form.  Grouped B/C (``ssm_n_groups``)
+broadcast over heads like GQA.  All functions are pure and scan-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+
+CHUNK = 256
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Causal segment-sums: out[..., t, s] = sum_{s < u <= t} a[..., u].
+
+    Used for the decay matrix L = exp(segsum(dt·A)) of the SSD dual form.
+    """
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # [B,T,H,P]   (P = head dim)
+    dt: jax.Array,       # [B,T,H]     (post-softplus)
+    a: jax.Array,        # [H]         (negative; A = -exp(A_log))
+    b_mat: jax.Array,    # [B,T,G,S]
+    c_mat: jax.Array,    # [B,T,G,S]
+    chunk: int = CHUNK,
+    h0: jax.Array | None = None,   # [B,H,P,S] initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,T,H,P], final_state [B,H,P,S])."""
+    bsz, t, h, p = x.shape
+    g, s = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    if t % chunk:
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = x.shape[1]
+    nc = tt // chunk
+
+    def to_chunks(v, extra_dims):
+        return v.reshape((bsz, nc, chunk) + extra_dims)
+
+    xc = to_chunks(x, (h, p))
+    dtc = to_chunks(dt, (h,)).astype(jnp.float32)
+    bc = jnp.repeat(to_chunks(b_mat, (g, s)), rep, axis=3)         # [B,N,Q,H,S]
+    cc = jnp.repeat(to_chunks(c_mat, (g, s)), rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                              # [B,N,Q,H]
+    da_cum = jnp.cumsum(da, axis=2)                                # within-chunk
+    da_total = da_cum[:, :, -1]                                    # [B,N,H]
+
+    # 1) intra-chunk (dual/attention form): L[t,s] = exp(segsum(da))
+    l_mat = jnp.exp(_segsum(jnp.moveaxis(da, -1, 2)))              # [B,N,H,Q,Q]
+    scores = jnp.einsum("bnqhs,bnkhs->bnhqk", cc, bc)              # [B,N,H,Q,Q]
+    y_diag = jnp.einsum("bnhqk,bnhqk,bnkh,bnkhp->bnqhp",
+                        scores, l_mat.astype(scores.dtype),
+                        dtc.astype(scores.dtype), xc)
+
+    # 2) chunk states: decay from s to end of chunk
+    decay_states = jnp.exp(da_total[:, :, None, :] - da_cum)       # [B,N,Q,H]
+    states = jnp.einsum("bnqhs,bnqh,bnqhp->bnhps",
+                        bc, (dtc * decay_states).astype(bc.dtype), xc)
+
+    # 3) inter-chunk recurrence over chunk states
+    def step(carry, inp):
+        st, dtot = inp
+        new = carry * jnp.exp(dtot)[:, :, None, None].astype(carry.dtype) + st
+        return new, carry                                          # emit state *entering* chunk
+
+    init = h0 if h0 is not None else jnp.zeros((bsz, h, p, s), dtype=states.dtype)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(da_total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                  # [B,N,H,P,S]
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(da_cum)                                  # [B,N,Q,H]
+    y_off = jnp.einsum("bnqhs,bnhps,bnqh->bnqhp",
+                       cc, prev_states, state_decay.astype(cc.dtype))
+    y = (y_diag + y_off).reshape(bsz, tt, h, p)[:, :t]
+    return y, final
+
+
+def ssd_decode_step(
+    x: jax.Array,        # [B,H,P]
+    dt: jax.Array,       # [B,H]
+    a: jax.Array,        # [H]
+    b_vec: jax.Array,    # [B,G,S]
+    c_vec: jax.Array,    # [B,G,S]
+    state: jax.Array,    # [B,H,P,S]
+) -> tuple[jax.Array, jax.Array]:
+    """One recurrent step: h ← h·exp(dt·A) + dt·(B ⊗ x);  y = h·C."""
+    h, g = x.shape[1], b_vec.shape[1]
+    rep = h // g
+    b_h = jnp.repeat(b_vec, rep, axis=1)                           # [B,H,S]
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, :])[..., None, None]
+    upd = jnp.einsum("bh,bhs,bhp->bhps", dt.astype(x.dtype), b_h, x)
+    state = state * decay.astype(state.dtype) + upd
+    y = jnp.einsum("bhps,bhs->bhp", state, c_h)
+    return y, state
+
+
+# --------------------------------------------------------------------------
+# Full Mamba-2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# --------------------------------------------------------------------------
+def _project_in(cfg: ModelConfig, x: jax.Array, p: dict):
+    """Separate z/x/BC/dt projections (split matrices so the model-axis
+    sharding boundaries align — perf-loop iteration A2)."""
+    from repro.models.layers import hint
+    z = hint(x @ p["z_proj"], "batch", None, "model")
+    xs = hint(x @ p["x_proj"], "batch", None, "model")
+    bc = x @ p["bc_proj"]                      # [.., 2·G·S] small, replicated
+    dt = x @ p["dt_proj"]                      # [.., nH]    small, replicated
+    return z, xs, bc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: [B,T,C], w: [W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out)
+
+
+def _conv_split(cfg: ModelConfig, xs: jax.Array, bc: jax.Array, p: dict):
+    """Conv applied per partition (x sharded over model, B/C replicated)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    x_out = _causal_conv(xs, p["conv_w"][:, :d_inner])
+    bc_out = _causal_conv(bc, p["conv_w"][:, d_inner:])
+    return x_out, bc_out
+
+
+def ssm_block(cfg: ModelConfig, x: jax.Array, p: dict, h0=None):
+    """Full-sequence Mamba-2 block. x: [B,T,d] -> (y [B,T,d], final_state)."""
+    bsz, t, _ = x.shape
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    g, s = cfg.ssm_n_groups, cfg.ssm_state
+    z, xs, bc, dt = _project_in(cfg, x, p)
+    x_conv, bc_conv = _conv_split(cfg, xs, bc, p)
+    b_mat, c_mat = jnp.split(bc_conv, 2, axis=-1)
+    x_ssm = x_conv.reshape(bsz, t, nh, cfg.ssm_head_dim)
+    b_mat = b_mat.reshape(bsz, t, g, s)
+    c_mat = c_mat.reshape(bsz, t, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(x_ssm, dt, a, b_mat, c_mat, h0=h0,
+                           chunk=cfg.ssm_chunk)
+    y = y + x_ssm * p["D"][None, None, :, None]
+    y = y.reshape(bsz, t, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm_w"], cfg.norm_eps)
+    return y @ p["ssm_out"], final
+
+
+def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state):
+    """Single-token Mamba-2 step.
+
+    x: [B,1,d]; conv_cache: [B,W-1,conv_dim] (trailing inputs);
+    state: [B,H,P,S].  Returns (y [B,1,d], conv_cache, state).
+    """
+    bsz = x.shape[0]
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    g, s = cfg.ssm_n_groups, cfg.ssm_state
+    z, xs, bc, dt = _project_in(cfg, x[:, :1], p)
+    z, xs, bc, dt = z[:, 0], xs[:, 0], bc[:, 0], dt[:, 0]
+    xbc_new = jnp.concatenate([xs, bc], axis=-1)
+    window = jnp.concatenate([conv_cache, xbc_new[:, None]], axis=1)  # [B,W,C]
+    conv_cache = window[:, 1:]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]))
+    x_ssm, b_vec, c_vec = jnp.split(xbc, [d_inner, d_inner + g * s], axis=-1)
+    x_ssm = x_ssm.reshape(bsz, nh, cfg.ssm_head_dim)
+    b_vec = b_vec.reshape(bsz, g, s)
+    c_vec = c_vec.reshape(bsz, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_decode_step(x_ssm, dt, a, b_vec, c_vec, state)
+    y = y + x_ssm * p["D"][None, :, None]
+    y = y.reshape(bsz, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm_w"], cfg.norm_eps)
+    return (y @ p["ssm_out"])[:, None], conv_cache, state

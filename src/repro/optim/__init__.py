@@ -1,0 +1,3 @@
+"""Optimizers."""
+from repro.optim import adamw
+__all__ = ["adamw"]

@@ -1,0 +1,199 @@
+"""Batched serving engine with DAK tiered offloading.
+
+Slot-based continuous batching: a fixed decode batch of ``max_batch`` slots;
+finished requests free their slot and the next queued request is prefilled
+into it.  Offloading is planned once at startup (OffloadEngine): weights are
+column-split per the per-op ratios and the KV cache is batch-split per the
+attention ratio; decode then runs the direct-access kernels
+(`serving.tiered_decode`) for dense archs, or the reference pjit path
+otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import engine as offload_engine
+from repro.core.ebmodel import WorkloadSpec
+from repro.core.hardware import HardwareSpec, TPU_V5E
+from repro.models import model as M
+from repro.serving import tiered_decode as TD
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                     # [T] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                       # -1: never stop early
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    served: int = 0
+    decode_steps: int = 0
+    decode_time: float = 0.0
+    prefill_time: float = 0.0
+
+    @property
+    def tpot(self) -> float:
+        return self.decode_time / max(1, self.decode_steps)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict[str, Any],
+        *,
+        max_batch: int = 4,
+        max_len: int = 128,
+        hw: HardwareSpec = TPU_V5E,
+        hbm_budget_bytes: float | None = None,
+        global_offload_ratio: float | None = None,
+        use_kernels: bool = True,
+    ):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.use_kernels = use_kernels and cfg.family in ("dense", "vlm")
+        wl = WorkloadSpec(batch=max_batch, seq_len=max_len, phase="decode")
+        self.plan = offload_engine.plan(
+            cfg, wl, hw, hbm_budget_bytes=hbm_budget_bytes,
+            global_ratio=global_offload_ratio)
+        self.window = self.plan.window.n_inflight
+        if self.use_kernels and self.plan.global_ratio > 0:
+            self.params = TD.partition_dense_params(
+                params, self.plan.param_ratios,
+                align=32 if cfg.d_model < 1024 else 128)
+            self.tiered = True
+        else:
+            self.params = params
+            self.tiered = False
+
+        dtype = next(iter(jax.tree.leaves(params))).dtype
+        base = M.init_cache(cfg, max_batch, max_len, dtype)
+        if self.tiered:
+            self.cache = TD.split_cache_batch(base, self.plan.kv_ratio)
+        else:
+            self.cache = base
+        self.lens = np.zeros(max_batch, dtype=np.int32)     # per-slot kv length
+        self.active: list[Request | None] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.stats = EngineStats()
+        self._next_tok = np.zeros((max_batch, 1), dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (one at a time — prompt
+        lengths vary; production would bucket them)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            t0 = time.time()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = M.prefill(self.cfg, self.params_for_prefill(),
+                                       {"tokens": tokens}, max_len=self.max_len)
+            self._write_slot_cache(slot, cache1)
+            self.lens[slot] = len(req.prompt)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self._next_tok[slot, 0] = nxt
+            req.out_tokens.append(nxt)
+            req.t_first = time.time()
+            self.active[slot] = req
+            self.stats.prefill_time += time.time() - t0
+
+    def params_for_prefill(self) -> dict[str, Any]:
+        """Prefill uses materialized weights (prefill is compute-bound; the
+        planner assigns it ratio via its own ops — here we serve prefill from
+        the local tier for simplicity)."""
+        if not self.tiered:
+            return self.params
+        mat = dict(self.params)
+        mat["layers"] = {}
+        per_layer = self.params["layers"]
+        keys = per_layer[0].keys()
+        for k in keys:
+            vals = [lp[k].materialize() if hasattr(lp[k], "materialize") else lp[k]
+                    for lp in per_layer]
+            mat["layers"][k] = jnp.stack(vals)
+        if hasattr(mat.get("lm_head"), "materialize"):
+            mat["lm_head"] = mat["lm_head"].materialize()
+        return mat
+
+    def _write_slot_cache(self, slot: int, cache1: dict[str, jax.Array]) -> None:
+        if not self.tiered:
+            for k in self.cache:
+                self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
+            return
+        b_loc = self.cache["k_local"].shape[1]
+        for name in ("k", "v"):
+            if slot < b_loc:
+                self.cache[f"{name}_local"] = \
+                    self.cache[f"{name}_local"].at[:, slot].set(cache1[name][:, 0])
+            else:
+                self.cache[f"{name}_remote"] = \
+                    self.cache[f"{name}_remote"].at[:, slot - b_loc].set(cache1[name][:, 0])
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One decode step for all active slots."""
+        self._admit()
+        if not any(self.active):
+            return
+        pos = int(self.lens.max())          # static-shape engine: slots aligned
+        tokens = jnp.asarray(self._next_tok)
+        t0 = time.time()
+        if self.tiered:
+            logits, self.cache = TD.tiered_decode_step(
+                self.cfg, self.params, self.cache, tokens, pos,
+                window=self.window, use_kernel=True)
+        else:
+            logits, self.cache = M.decode_step(
+                self.cfg, self.params, self.cache, tokens, jnp.int32(pos))
+        logits.block_until_ready()
+        self.stats.decode_time += time.time() - t0
+        self.stats.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.lens[slot] += 1
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or tok == req.eos_id
+                    or self.lens[slot] >= self.max_len - 1)
+            if done:
+                req.t_done = time.time()
+                self.stats.served += 1
+                self.active[slot] = None
+                self.lens[slot] = 0
+            else:
+                self._next_tok[slot, 0] = tok
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.stats

@@ -1,0 +1,161 @@
+"""Tiered decode path: the paper's system end-to-end on a dense LM.
+
+This is the serving-side integration of DAK: every large linear operand is
+a `TieredArray` (column-split per the planner's per-op ratios) computed by
+`SplitK_GEMM`, and the KV cache is batch-split across tiers and attended by
+`SplitK_FlashAttn` — both with the congestion window from the plan.  This
+path runs real kernels (interpret mode on CPU) and is exercised by
+examples/serve_offload.py and the serving tests; the pjit path
+(models.decode_step) remains the large-scale route.
+
+Supports the dense/vlm families (the paper evaluates OPT/Llama-class
+models); MoE/SSM serving uses the reference path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tiering import TieredArray, partition
+from repro.kernels import ops
+from repro.models import layers as L
+
+TIERABLE = ("wq", "wkv", "wo", "wi", "wdown", "lm_head")
+
+
+def partition_dense_params(
+    params: dict[str, Any], ratios: dict[str, float], align: int = 128
+) -> dict[str, Any]:
+    """Split per-layer weight stacks into per-layer lists of TieredArrays.
+
+    Stacked [L, d_in, d_out] weights become per-layer TieredArrays (the
+    kernel operates per layer; python-loop decode is the serving path)."""
+    out: dict[str, Any] = dict(params)
+    layers = params["layers"]
+    n_layers = next(iter(layers.values())).shape[0]
+    new_layers: list[dict[str, Any]] = []
+    ratio_of = {
+        "wq": ratios.get("wq", 0.0), "wkv": ratios.get("wq", 0.0),
+        "wo": ratios.get("wo", 0.0), "wi": ratios.get("wi", 0.0),
+        "wdown": ratios.get("wdown", 0.0),
+    }
+    for i in range(n_layers):
+        lp: dict[str, Any] = {}
+        for k, v in layers.items():
+            leaf = v[i]
+            if k in ratio_of and leaf.ndim == 2 and ratio_of[k] > 0:
+                lp[k] = partition(leaf, ratio_of[k], axis=1, align=align)
+            else:
+                lp[k] = leaf
+        new_layers.append(lp)
+    out["layers"] = new_layers
+    if "lm_head" in params and ratios.get("lm_head", 0.0) > 0:
+        out["lm_head"] = partition(params["lm_head"], ratios["lm_head"], axis=1,
+                                   align=align)
+    return out
+
+
+def _mm(x: jax.Array, w: Any, window: int, use_kernel: bool) -> jax.Array:
+    if isinstance(w, TieredArray):
+        return ops.tiered_matmul(x, w, window=window, use_kernel=use_kernel)
+    return x @ w
+
+
+def split_cache_batch(cache: dict[str, jax.Array], kv_ratio: float,
+                      align: int = 1) -> dict[str, Any]:
+    """Batch-split a dense KV cache {k,v: [L,B,S,K,hd]} across tiers
+    (paper §5: SplitK_FlashAttn partitions the KV cache along batch)."""
+    b = cache["k"].shape[1]
+    b_rem = int(round(b * kv_ratio / align)) * align
+    b_loc = b - b_rem
+    return {
+        "k_local": cache["k"][:, :b_loc], "v_local": cache["v"][:, :b_loc],
+        "k_remote": cache["k"][:, b_loc:], "v_remote": cache["v"][:, b_loc:],
+    }
+
+
+def tiered_decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],          # from partition_dense_params
+    cache: dict[str, Any],           # from split_cache_batch
+    tokens: jax.Array,               # [B,1] int32
+    pos: int,
+    *,
+    window: int = 2,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """One decode step over tiered weights + tiered KV (dense archs)."""
+    hd = cfg.resolved_head_dim
+    hp, kv_h = cfg.padded_heads, cfg.n_kv_heads
+    b_loc = cache["k_local"].shape[1]
+    x = params["embed"][tokens]                       # [B,1,d]
+    b = x.shape[0]
+
+    for i, lp in enumerate(params["layers"]):
+        hn = L.norm(cfg, x, lp, "ln1")
+        q = _mm(hn, lp["wq"], window, use_kernel)
+        k_v = _mm(hn, lp["wkv"], window, use_kernel)
+        if cfg.qkv_bias:
+            q = q + lp["bq"]
+            k_v = k_v + lp["bkv"]
+        k_new, v_new = jnp.split(k_v, 2, axis=-1)
+        q = q.reshape(b, 1, hp, hd)
+        k_new = k_new.reshape(b, 1, kv_h, hd)
+        v_new = v_new.reshape(b, 1, kv_h, hd)
+        if cfg.qk_norm:
+            q = L.rmsnorm(q, lp["q_norm_w"], cfg.norm_eps)
+            k_new = L.rmsnorm(k_new, lp["k_norm_w"], cfg.norm_eps)
+        rot = int(hd * cfg.rope_fraction)
+        if rot:
+            cos, sin = L.rope_cos_sin(jnp.asarray([pos]), rot, cfg.rope_theta)
+            q = L.apply_rope(q, cos, sin, rot)
+            k_new = L.apply_rope(k_new, cos, sin, rot)
+        # write the new K/V row into the right tier slice at `pos`
+        if b_loc > 0:
+            cache["k_local"] = jax.lax.dynamic_update_slice(
+                cache["k_local"], _layer_row(k_new[:b_loc], i, cache["k_local"]),
+                (i, 0, pos, 0, 0))
+            cache["v_local"] = jax.lax.dynamic_update_slice(
+                cache["v_local"], _layer_row(v_new[:b_loc], i, cache["v_local"]),
+                (i, 0, pos, 0, 0))
+        if b_loc < b:
+            cache["k_remote"] = jax.lax.dynamic_update_slice(
+                cache["k_remote"], _layer_row(k_new[b_loc:], i, cache["k_remote"]),
+                (i, 0, pos, 0, 0))
+            cache["v_remote"] = jax.lax.dynamic_update_slice(
+                cache["v_remote"], _layer_row(v_new[b_loc:], i, cache["v_remote"]),
+                (i, 0, pos, 0, 0))
+        attn = ops.tiered_decode_attention(
+            q[:, 0],
+            {"k_local": cache["k_local"][i], "v_local": cache["v_local"][i],
+             "k_remote": cache["k_remote"][i], "v_remote": cache["v_remote"][i]},
+            kv_len=pos + 1, window=window, use_kernel=use_kernel,
+        )[:, None]                                    # [B,1,Hp,hd]
+        x = x + _mm(attn.reshape(b, 1, hp * hd), lp["wo"], window, use_kernel)
+        hn2 = L.norm(cfg, x, lp, "ln2")
+        if cfg.mlp == "swiglu":
+            gu = _mm(hn2, lp["wi"], window, use_kernel)
+            gate, up = jnp.split(gu, 2, axis=-1)
+            hmid = jax.nn.silu(gate) * up
+        else:
+            hmid = _mm(hn2, lp["wi"], window, use_kernel)
+            if "bi" in lp:
+                hmid = hmid + lp["bi"]
+            hmid = jax.nn.gelu(hmid)
+        down = _mm(hmid, lp["wdown"], window, use_kernel)
+        if "bdown" in lp:
+            down = down + lp["bdown"]
+        x = x + down
+
+    xn = (L.layernorm(x, params["final_w"], params["final_b"], cfg.norm_eps)
+          if cfg.norm == "layernorm" else L.rmsnorm(x, params["final_w"], cfg.norm_eps))
+    logits = _mm(xn, params["lm_head"], window, use_kernel)
+    return logits, cache
+
+
+def _layer_row(new: jax.Array, layer: int, cache_ref: jax.Array) -> jax.Array:
+    """[Bpart,1,K,hd] -> [1,Bpart,1,K,hd] update block for layer `layer`."""
+    return new.astype(cache_ref.dtype)[None]

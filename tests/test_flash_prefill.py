@@ -1,0 +1,55 @@
+"""flash_prefill kernel sweep vs the model-layer attention oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.kernels.flash_prefill import flash_prefill
+from repro.models import layers as L
+
+CFG = C.get_smoke("qwen3_32b")
+
+
+def _ref(q, k, v, causal):
+    return L._attend_dense(CFG, q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=causal)
+
+
+@pytest.mark.parametrize("b,h,kh,t,hd", [(2, 8, 2, 512, 64), (1, 4, 4, 384, 32),
+                                         (2, 4, 1, 256, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill_sweep(b, h, kh, t, hd, causal):
+    key = jax.random.PRNGKey(b * t + h)
+    q = jax.random.normal(key, (b, h, t, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, kh, t, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, kh, t, hd), jnp.float32)
+    o = flash_prefill(q, k, v, causal=causal, block_q=128, block_k=128,
+                      interpret=True)
+    ref = _ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(o.transpose(0, 2, 1, 3)),
+                               np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_bf16():
+    b, h, kh, t, hd = 1, 4, 2, 256, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, t, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, kh, t, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, kh, t, hd), jnp.bfloat16)
+    o = flash_prefill(q, k, v, block_q=128, block_k=128, interpret=True)
+    ref = _ref(q, k, v, True)
+    err = np.max(np.abs(np.asarray(o.transpose(0, 2, 1, 3), np.float32)
+                        - np.asarray(ref, np.float32)))
+    assert err < 5e-2
+
+
+def test_flash_prefill_block_invariance():
+    b, h, kh, t, hd = 1, 2, 2, 512, 32
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, h, t, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, kh, t, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, kh, t, hd), jnp.float32)
+    o1 = flash_prefill(q, k, v, block_q=128, block_k=256, interpret=True)
+    o2 = flash_prefill(q, k, v, block_q=256, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-5, atol=2e-5)

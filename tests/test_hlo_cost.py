@@ -1,0 +1,67 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer."""
+from __future__ import annotations
+
+from repro.launch import hlo_cost
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%dot.1), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16] parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%arg, %arg)
+  %while.1 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"},"known_init_step":{"init":"0","step":"1"}}
+  ROOT %out = f32[8,16] get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_trip_count_multiplication():
+    c = hlo_cost.analyze(HLO)
+    # dot: 2 * 8*16 * 16 flops, times trip count 5
+    assert c.flops == 5 * 2 * 8 * 16 * 16
+    # all-reduce payload 8*16*4 bytes, x2 ring factor, x5 trips
+    assert c.collective_bytes == 5 * 2 * (8 * 16 * 4)
+    assert c.collective_counts["all-reduce"] == 5
+
+
+def test_shape_bytes():
+    assert hlo_cost._shape_bytes("bf16[2,3]{1,0}") == 12
+    assert hlo_cost._shape_bytes("(f32[4], s32[2])") == 24
+    assert hlo_cost._shape_bytes("pred[]") == 1
+
+
+def test_dus_counts_update_only():
+    hlo = """\
+HloModule t
+
+ENTRY %main (a: f32[100,100], u: f32[1,100]) -> f32[100,100] {
+  %a = f32[100,100] parameter(0)
+  %u = f32[1,100] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %dus = f32[100,100] dynamic-update-slice(%a, %u, %z, %z)
+}
+"""
+    c = hlo_cost.analyze(hlo)
+    # 2 x update bytes, NOT operand+result (100x100 buffers)
+    assert c.bytes == 2 * 100 * 4

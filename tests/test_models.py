@@ -1,0 +1,181 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes + no
+NaNs, prefill+decode parity vs the full forward, and SSD correctness."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.models import ssm
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke(arch):
+    cfg = C.get_smoke(arch)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=100.0)  # dropless
+    return cfg
+
+
+def _batch(cfg, b=2, t=16):
+    if cfg.family == "encoder":
+        return {"frames": jax.random.normal(KEY, (b, t, M.AUDIO_FRAME_DIM))}
+    if cfg.family == "vlm":
+        return {"tokens": jnp.zeros((b, t // 2), jnp.int32),
+                "patches": jax.random.normal(KEY, (b, t // 2, M.VISION_EMBED_DIM))}
+    return {"tokens": jax.random.randint(KEY, (b, t), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = _smoke(arch)
+    params = M.init_params(cfg, KEY)
+    logits = M.forward(cfg, params, _batch(cfg))
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_train_step_runs(arch):
+    """One real optimizer step on the reduced config; loss finite+decreasing
+    direction is not asserted (1 step), params must change."""
+    cfg = _smoke(arch)
+    shape = ShapeConfig("t", 16, 4, "train")
+    pipe = SyntheticPipeline(cfg, shape)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    params = M.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step = S.make_train_step(cfg, num_microbatches=2, remat=True)
+    loss, params2, opt2, gnorm = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+    changed = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, params2)
+    assert max(jax.tree.leaves(changed)) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in C.ARCH_IDS
+                                  if C.get_smoke(a).has_decoder])
+def test_prefill_decode_parity(arch):
+    """prefill(T) + decode(token T) must equal forward(T+1) at the last
+    position — validates KV caches, RoPE offsets and SSD state handoff."""
+    cfg = _smoke(arch)
+    params = M.init_params(cfg, KEY)
+    b, t = 2, 12
+    toks = jax.random.randint(KEY, (b, t + 1), 0, cfg.vocab)
+    full = M.forward(cfg, params, {"tokens": toks})
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :t]}, max_len=t + 4)
+    lg, _ = M.decode_step(cfg, params, cache,
+                          toks[:, t:t + 1].astype(jnp.int32), jnp.int32(t))
+    err = float(jnp.max(jnp.abs(full[:, -1] - lg[:, 0]))
+                / (jnp.max(jnp.abs(full[:, -1])) + 1e-9))
+    assert err < 2e-3, f"{arch}: prefill+decode diverges from forward ({err:.1e})"
+
+
+@pytest.mark.parametrize("arch", [a for a in C.ARCH_IDS
+                                  if C.get_smoke(a).has_decoder])
+def test_multi_step_decode(arch):
+    """8 greedy decode steps stay finite and match re-prefill logits."""
+    cfg = _smoke(arch)
+    params = M.init_params(cfg, KEY)
+    b, t, n_new = 1, 8, 4
+    toks = jax.random.randint(KEY, (b, t), 0, cfg.vocab)
+    lg, cache = M.prefill(cfg, params, {"tokens": toks}, max_len=t + n_new + 1)
+    seq = [int(jnp.argmax(lg[0, -1]))]
+    for i in range(n_new):
+        lg, cache = M.decode_step(cfg, params, cache,
+                                  jnp.asarray([[seq[-1]]], jnp.int32),
+                                  jnp.int32(t + i))
+        assert bool(jnp.all(jnp.isfinite(lg)))
+        seq.append(int(jnp.argmax(lg[0, 0])))
+    # teacher-forced check: forward over prompt+generated last logits agree
+    all_toks = jnp.concatenate([toks, jnp.asarray([seq[:-1]], jnp.int32)], axis=1)
+    full = M.forward(cfg, params, {"tokens": all_toks})
+    assert int(jnp.argmax(full[0, -1])) == seq[-1]
+
+
+def test_ssd_chunked_matches_recurrence():
+    """SSD dual (chunked) form == naive recurrent scan."""
+    b, t, h, p, g, s = 2, 64, 4, 8, 1, 16
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (b, t, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (h,)) * 0.2)
+    bm = jax.random.normal(jax.random.PRNGKey(6), (b, t, g, s))
+    cm = jax.random.normal(jax.random.PRNGKey(7), (b, t, g, s))
+    y_chunk, final_chunk = ssm.ssd_chunked(x, dt, a, bm, cm, chunk=16)
+
+    state = jnp.zeros((b, h, p, s))
+    ys = []
+    for i in range(t):
+        y_i, state = ssm.ssd_decode_step(x[:, i], dt[:, i], a,
+                                         bm[:, i], cm[:, i], state)
+        ys.append(y_i)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_chunk), np.asarray(state),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_ragged_tail():
+    """Sequence length not a multiple of the chunk is padded correctly."""
+    b, t, h, p, g, s = 1, 37, 2, 4, 1, 8
+    x = jax.random.normal(KEY, (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(KEY, (b, t, h)))
+    a = -jnp.ones((h,))
+    bm = jax.random.normal(KEY, (b, t, g, s))
+    cm = jax.random.normal(KEY, (b, t, g, s))
+    y, final = ssm.ssd_chunked(x, dt, a, bm, cm, chunk=16)
+    assert y.shape == (b, t, h, p)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(final)))
+
+
+def test_moe_dropping_bounded():
+    """With the default capacity factor, dropped fraction is small for a
+    balanced router at realistic token counts."""
+    cfg = C.get_smoke("qwen3_moe_30b_a3b")      # cf = 1.5 default
+    params = M.init_params(cfg, KEY)
+    b, t = 4, 64
+    batch = {"tokens": jax.random.randint(KEY, (b, t), 0, cfg.vocab)}
+    logits = M.forward(cfg, params, batch)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_padded_heads_exactness():
+    """Zero-padded TP heads must not change the output: compare padded
+    (multiple=16) vs unpadded (multiple=1) on identical base weights."""
+    base = C.get_smoke("starcoder2_3b")
+    cfg_pad = dataclasses.replace(base, tp_head_multiple=16)
+    cfg_raw = dataclasses.replace(base, tp_head_multiple=1)
+    assert cfg_pad.padded_heads > cfg_raw.padded_heads
+    p_pad = M.init_params(cfg_pad, KEY)
+    p_raw = M.init_params(cfg_raw, KEY)
+    # copy the real-head weights from padded init into the raw layout
+    hd = base.resolved_head_dim
+    nh = base.n_heads * hd
+    lay_raw = dict(p_raw["layers"])
+    lay_raw["wq"] = p_pad["layers"]["wq"][..., :nh]
+    lay_raw["wo"] = p_pad["layers"]["wo"][:, :nh, :]
+    for k in lay_raw:
+        if k not in ("wq", "wo"):
+            lay_raw[k] = p_pad["layers"][k][...,] if k.startswith("b") and k == "bq" \
+                else p_pad["layers"][k]
+    lay_raw["bq"] = p_pad["layers"]["bq"][..., :nh]
+    p_raw = {**p_pad, "layers": lay_raw}
+    batch = _batch(base)
+    out_pad = M.forward(cfg_pad, p_pad, batch)
+    out_raw = M.forward(cfg_raw, p_raw, batch)
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_raw),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,131 @@
+"""Greedy offload planner: optimality (paper Thms 1-3) + invariants."""
+from __future__ import annotations
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.ebmodel import OpProfile, total_latency
+from repro.core.hardware import GH200, RTX6000_BLACKWELL, TPU_V5E
+
+SYSTEMS = [TPU_V5E, GH200, RTX6000_BLACKWELL]
+
+
+def op_strategy():
+    return st.builds(
+        OpProfile,
+        name=st.just("op"),
+        bytes=st.floats(1e8, 1e11),
+        flops=st.floats(1e6, 1e15),
+    )
+
+
+@hypothesis.given(
+    ops=st.lists(op_strategy(), min_size=2, max_size=4),
+    ratio=st.floats(0.0, 1.0),
+    hw=st.sampled_from(SYSTEMS),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_greedy_matches_brute_force(ops, ratio, hw):
+    """Greedy latency == grid-search optimum (within grid resolution)."""
+    sol = planner.solve(ops, ratio, hw)
+    bf = planner.brute_force(ops, ratio, hw, grid=40)
+    # grid search is an upper bound on the optimum's precision
+    assert sol.latency <= bf.latency * 1.005 + 1e-12
+
+
+@hypothesis.given(
+    ops=st.lists(op_strategy(), min_size=1, max_size=6),
+    ratio=st.floats(0.0, 1.0),
+    hw=st.sampled_from(SYSTEMS),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_budget_constraint_and_bounds(ops, ratio, hw):
+    sol = planner.solve(ops, ratio, hw)
+    c = np.array([op.bytes for op in ops])
+    x = np.array(sol.ratios)
+    assert np.all(x >= -1e-9) and np.all(x <= 1 + 1e-9)
+    np.testing.assert_allclose(np.dot(c, x), ratio * c.sum(), rtol=1e-6, atol=1e-3)
+
+
+@hypothesis.given(
+    ops=st.lists(op_strategy(), min_size=2, max_size=5),
+    ratio=st.floats(0.0, 1.0),
+    hw=st.sampled_from(SYSTEMS),
+    seed=st.integers(0, 2**31),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_greedy_beats_random_feasible(ops, ratio, hw, seed):
+    """No random feasible allocation is better than the greedy one."""
+    sol = planner.solve(ops, ratio, hw)
+    rng = np.random.default_rng(seed)
+    c = np.array([op.bytes for op in ops])
+    budget = ratio * c.sum()
+    # random feasible point via dirichlet + projection
+    for _ in range(5):
+        w = rng.dirichlet(np.ones(len(ops)))
+        x = np.minimum(1.0, w * budget / c)
+        deficit = budget - np.dot(c, x)
+        for i in np.argsort(-c):
+            room = (1.0 - x[i]) * c[i]
+            take = min(room, deficit)
+            x[i] += take / c[i]
+            deficit -= take
+            if deficit <= 1e-9:
+                break
+        if deficit > 1e-6 * max(budget, 1.0):
+            continue  # not feasible (numerically), skip
+        assert sol.latency <= total_latency(ops, list(x), hw) * (1 + 1e-9)
+
+
+def test_greedy_never_worse_than_uniform():
+    """Paper Fig. 11 invariant: greedy <= uniform at every global ratio."""
+    ops = [
+        OpProfile("attn", bytes=45e9, flops=1e12, kind="attention"),   # mem-bound
+        OpProfile("mlp", bytes=60e9, flops=5e15, kind="linear"),       # compute-bound
+    ]
+    for hw in SYSTEMS:
+        for r in np.linspace(0, 1, 21):
+            g = planner.solve(ops, float(r), hw)
+            u = planner.solve_uniform(ops, float(r), hw)
+            assert g.latency <= u.latency * (1 + 1e-9)
+
+
+def test_phase1_prefers_memory_bound():
+    """Small budgets go to memory-bound ops, none to compute-bound (Thm 1)."""
+    hw = GH200
+    mem = OpProfile("mem", bytes=50e9, flops=1e10)
+    comp = OpProfile("comp", bytes=50e9, flops=1e18)
+    assert mem.boundness(hw) == "memory" and comp.boundness(hw) == "compute"
+    sol = planner.solve([mem, comp], 0.02, hw)
+    assert sol.ratios[0] > 0.03          # all budget went to the memory-bound op
+    assert sol.ratios[1] < 1e-9
+
+
+def test_memory_bound_peak_ratio():
+    """Memory-bound EB peaks at B_h/(B_h+B_g) (paper §4.2.1)."""
+    hw = GH200
+    op = OpProfile("w", bytes=30e9, flops=1e10)
+    peak = hw.host.bandwidth / (hw.host.bandwidth + hw.hbm.bandwidth)
+    xs = np.linspace(0, 1, 201)
+    ebs = [op.eb(float(x), hw) for x in xs]
+    assert abs(xs[int(np.argmax(ebs))] - peak) < 0.01
+    # peak EB equals aggregate bandwidth
+    assert op.eb(peak, hw) == pytest.approx(hw.aggregate_bw, rel=1e-6)
+
+
+def test_compute_bound_flat_then_falls():
+    hw = GH200
+    op = OpProfile("w", bytes=1e9, flops=1e15)
+    assert op.boundness(hw) == "compute"
+    x_hi = op.x_hi(hw)
+    assert op.eb(0.0, hw) == pytest.approx(op.eb(min(1.0, x_hi * 0.9), hw), rel=1e-6)
+    if x_hi < 0.95:
+        assert op.eb(min(1.0, x_hi * 1.5), hw) < op.eb(0.0, hw)
+
+
+def test_global_offload_ratio():
+    assert planner.global_offload_ratio(140e9, 96e9) == pytest.approx(1 - 96 / 140)
+    assert planner.global_offload_ratio(50e9, 96e9) == 0.0
