@@ -1,7 +1,7 @@
 """END-TO-END DRIVER (the paper's kind is inference): serve a small LM with
 batched requests through the full DAK stack — greedy offload plan, tiered
-weights computed by SplitK_GEMM, batch-split KV attended by
-SplitK_FlashAttn, slot-based continuous batching.
+weights computed by SplitK_GEMM, paged tiered KV attended by the
+page-table-indexed SplitK_FlashAttn, ragged continuous batching.
 
   PYTHONPATH=src python examples/serve_offload.py [--requests 8]
 """

@@ -1,0 +1,43 @@
+"""Version compatibility shims for the supported jax range.
+
+The repo targets jax >= 0.4.37.  ``jax.sharding.get_abstract_mesh`` (the
+context-mesh accessor used by the sharding hints) only exists in newer jax
+releases; on older ones the mesh entered via ``with mesh:`` lives in
+``jax.interpreters.pxla.thread_resources``.  Both paths return an object
+with ``.axis_names`` and ``.shape`` (name -> size mapping), which is all the
+callers use.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# Host-DRAM memory space for Pallas operands.  Newer jax exposes
+# ``pltpu.HOST``; on older releases there is no host space, so the remote
+# tier is declared ``ANY`` — identical semantics in interpret mode (the CI
+# substrate), and on-device the operand is merely not host-pinned.
+HOST = getattr(pltpu, "HOST", pltpu.ANY)
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams`` (old)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def get_abstract_mesh() -> Any | None:
+    """The mesh active in the current context, or None when there is none.
+
+    Returns the abstract mesh on jax versions that track one; otherwise the
+    physical mesh installed by a ``with mesh:`` block (empty mesh -> None, so
+    callers can keep a single ``mesh is None or not mesh.axis_names`` guard).
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh

@@ -21,6 +21,23 @@ from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class KVPagePlan:
+    """Page-granular KV accounting: the serving cache allocates fixed-size
+    pages, so the planner's continuous ``kv_ratio`` must round to a page
+    *budget* — ``local_pages`` is the HBM pool size, ``remote_pages`` the
+    host pool size; their sum covers the full (batch x max_len) cache."""
+    page_size: int                         # tokens per page
+    page_bytes: float                      # bytes per page across all layers
+    total_pages: int
+    local_pages: int
+    remote_pages: int
+
+    @property
+    def achieved_kv_ratio(self) -> float:
+        return self.remote_pages / self.total_pages if self.total_pages else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class TieringPlan:
     global_ratio: float
     op_ratios: dict[str, float]            # op name -> ratio
@@ -32,6 +49,7 @@ class TieringPlan:
     broadcast: multicast.BroadcastPlan
     footprint_bytes: float
     ops: tuple[OpProfile, ...] = ()
+    kv_pages: KVPagePlan | None = None     # page budget realizing kv_ratio
 
 
 # Map op names -> param path patterns used by models/transformer.py params.
@@ -127,6 +145,40 @@ def kv_cache_bytes(cfg: ModelConfig, wl: WorkloadSpec) -> float:
     return float(wl.batch) * wl.seq_len * per_tok * wl.dtype_bytes * n_attn
 
 
+def kv_page_plan(
+    cfg: ModelConfig, wl: WorkloadSpec, kv_ratio: float, page_size: int = 16
+) -> KVPagePlan | None:
+    """Map the planner's continuous ``kv_ratio`` onto a page budget.
+
+    ``remote_pages = round(kv_ratio * total)`` with the guarantee (when the
+    pool has more than one page) that a non-zero ratio yields at least one
+    remote page — so the remote tier is actually exercised — and a sub-1.0
+    ratio keeps at least one local page.  A single-page pool cannot satisfy
+    both, so it simply rounds: the page goes remote iff kv_ratio >= 0.5."""
+    if page_size <= 0:
+        raise ValueError(f"kv page_size must be positive, got {page_size}")
+    total_bytes = kv_cache_bytes(cfg, wl)
+    if total_bytes <= 0:
+        return None
+    pages_per_seq = -(-wl.seq_len // page_size)
+    total = wl.batch * pages_per_seq
+    per_tok = total_bytes / (wl.batch * wl.seq_len)
+    remote = int(round(kv_ratio * total + 1e-9))
+    if total > 1:
+        if kv_ratio > 0:
+            remote = max(1, remote)
+        if kv_ratio < 1:
+            remote = min(total - 1, remote)
+    remote = max(0, min(total, remote))
+    return KVPagePlan(
+        page_size=page_size,
+        page_bytes=per_tok * page_size,
+        total_pages=total,
+        local_pages=total - remote,
+        remote_pages=remote,
+    )
+
+
 def plan(
     cfg: ModelConfig,
     wl: WorkloadSpec,
@@ -135,6 +187,7 @@ def plan(
     global_ratio: float | None = None,
     pod_chips: int = 1,
     dma_chunk_bytes: int = 512 * 1024,
+    kv_page_size: int = 16,
 ) -> TieringPlan:
     """Full DAK planning pass. Either give an HBM budget (paper Fig. 10 mode)
     or pin the global ratio directly (paper Fig. 8/9 sweep mode)."""
@@ -158,17 +211,19 @@ def plan(
         ici_bw_per_chip=hw.ici_link_bw * max(1, hw.ici_links) or hw.host.bandwidth,
     )
     total_c = sum(op.bytes for op in ops)
+    kv_ratio = op_ratios.get("attention", 0.0)
     return TieringPlan(
         global_ratio=global_ratio,
         op_ratios=op_ratios,
         param_ratios={
             pat: op_ratios[name] for name, pat in _OP_TO_PARAM.items() if name in op_ratios
         },
-        kv_ratio=op_ratios.get("attention", 0.0),
+        kv_ratio=kv_ratio,
         latency=sol.latency,
         effective_bandwidth=total_c / sol.latency if sol.latency > 0 else 0.0,
         window=window,
         broadcast=bcast,
         footprint_bytes=footprint,
         ops=tuple(ops),
+        kv_pages=kv_page_plan(cfg, wl, kv_ratio, page_size=kv_page_size),
     )

@@ -1,7 +1,12 @@
 """Direct-access Pallas TPU kernels (SplitK_GEMM / SplitK_FlashAttn) + causal
 flash-prefill attention."""
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.ops import broadcast_remote, tiered_decode_attention, tiered_matmul
+from repro.kernels.ops import (
+    broadcast_remote,
+    paged_decode_attention,
+    tiered_decode_attention,
+    tiered_matmul,
+)
 
-__all__ = ["broadcast_remote", "flash_prefill", "tiered_decode_attention",
-           "tiered_matmul"]
+__all__ = ["broadcast_remote", "flash_prefill", "paged_decode_attention",
+           "tiered_decode_attention", "tiered_matmul"]

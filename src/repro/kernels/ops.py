@@ -18,7 +18,11 @@ import jax.numpy as jnp
 
 from repro.core.tiering import TieredArray
 from repro.kernels import ref
-from repro.kernels.splitk_flashattn import DEFAULT_BLOCK_S, splitk_flashattn
+from repro.kernels.splitk_flashattn import (
+    DEFAULT_BLOCK_S,
+    paged_splitk_flashattn,
+    splitk_flashattn,
+)
 from repro.kernels.splitk_gemm import (
     DEFAULT_BLOCK_K,
     DEFAULT_BLOCK_M,
@@ -89,6 +93,28 @@ def tiered_decode_attention(
         return ref.splitk_flashattn_ref(q, kl, vl, kr, vr, kv_len)
     return splitk_flashattn(
         q, kl, vl, kr, vr, kv_len=kv_len, block_s=block_s, window=window,
+        interpret=_interpret_default() if interpret is None else interpret)
+
+
+def paged_decode_attention(
+    q: jax.Array,                      # [B, H, hd]
+    pools: dict[str, jax.Array],       # k_local/v_local [P_loc+1,page,Kh,hd], k_remote/v_remote
+    table: jax.Array,                  # [B, MP] int32 — page index in its tier pool
+    tier: jax.Array,                   # [B, MP] int32 — 0 local / 1 remote
+    lens: jax.Array,                   # [B] int32 — valid tokens per slot (ragged)
+    *,
+    window: int = 2,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ragged paged tiered decode attention (per-slot kv lengths; each page
+    fetched from the tier its page-table entry names)."""
+    kl, vl = pools["k_local"], pools["v_local"]
+    kr, vr = pools["k_remote"], pools["v_remote"]
+    if not use_kernel:
+        return ref.paged_flashattn_ref(q, kl, vl, kr, vr, table, tier, lens)
+    return paged_splitk_flashattn(
+        q, kl, vl, kr, vr, table, tier, lens, window=window,
         interpret=_interpret_default() if interpret is None else interpret)
 
 

@@ -11,6 +11,42 @@ def splitk_gemm_ref(x: jax.Array, w_local: jax.Array, w_remote: jax.Array) -> ja
     return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
 
 
+def paged_flashattn_ref(
+    q: jax.Array,            # [B, H, hd]
+    k_pages_local: jax.Array,   # [P_loc(+sink), page, Kh, hd]
+    v_pages_local: jax.Array,
+    k_pages_remote: jax.Array,  # [P_rem(+sink), page, Kh, hd]
+    v_pages_remote: jax.Array,
+    table: jax.Array,        # [B, MP] int32 — index into the page's tier pool
+    tier: jax.Array,         # [B, MP] int32 — 0 local, 1 remote
+    lens: jax.Array,         # [B] int32 — valid tokens per slot
+) -> jax.Array:
+    """Paged tiered decode attention oracle: gather each slot's pages from
+    its tier pools into a dense [B, MP*page, Kh, hd] view, then run
+    per-slot-masked softmax attention.  Slots with lens == 0 return zeros."""
+    ps = k_pages_local.shape[1]
+    idx_l = jnp.clip(table, 0, k_pages_local.shape[0] - 1)
+    idx_r = jnp.clip(table, 0, k_pages_remote.shape[0] - 1)
+    sel = (tier > 0)[..., None, None, None]
+    k = jnp.where(sel, k_pages_remote[idx_r], k_pages_local[idx_l])
+    v = jnp.where(sel, v_pages_remote[idx_r], v_pages_local[idx_l])
+    b, mp = table.shape
+    kh, hd = k.shape[-2], k.shape[-1]
+    k = k.reshape(b, mp * ps, kh, hd).astype(jnp.float32)
+    v = v.reshape(b, mp * ps, kh, hd).astype(jnp.float32)
+    h = q.shape[1]
+    g = h // kh
+    qg = q.reshape(b, g, kh, hd).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.einsum("bgkh,bskh->bgks", qg, k)
+    mask = jnp.arange(mp * ps)[None, None, None, :] < lens[:, None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # lens == 0 slots: every position masked -> uniform softmax garbage; zero.
+    probs = jnp.where(lens[:, None, None, None] > 0, probs, 0.0)
+    out = jnp.einsum("bgks,bskh->bgkh", probs, v)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def splitk_flashattn_ref(
     q: jax.Array,            # [B, H, hd]
     k_local: jax.Array,      # [B_loc, S, Kh, hd]

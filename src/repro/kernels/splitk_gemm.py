@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 128
@@ -141,7 +143,7 @@ def splitk_gemm(
         in_specs=[
             pl.BlockSpec((block_m, k), lambda i, j, order: (i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pltpu.HOST),
+            pl.BlockSpec(memory_space=compat.HOST),
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda i, j, order: (i, order[j])),
@@ -157,7 +159,7 @@ def splitk_gemm(
             n_loc_tiles=n_loc_tiles, window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n_loc + n_rem), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

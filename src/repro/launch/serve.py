@@ -26,6 +26,7 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--offload-ratio", type=float, default=0.4)
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--no-kernels", action="store_true")
     args = ap.parse_args(argv)
 
@@ -34,7 +35,7 @@ def main(argv: list[str] | None = None) -> dict:
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         global_offload_ratio=args.offload_ratio,
-        use_kernels=not args.no_kernels)
+        use_kernels=not args.no_kernels, page_size=args.page_size)
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
@@ -52,7 +53,13 @@ def main(argv: list[str] | None = None) -> dict:
     print(f"served {stats.served} requests in {wall:.2f}s | "
           f"decode steps {stats.decode_steps} | TPOT {stats.tpot*1e3:.1f} ms | "
           f"prefill {stats.prefill_time:.2f}s")
-    return {"served": stats.served, "tpot": stats.tpot, "wall": wall}
+    if engine.tiered:
+        pp = engine.plan.kv_pages
+        print(f"kv pages: size={pp.page_size} local={pp.local_pages} "
+              f"remote={pp.remote_pages} | peak local={stats.local_pages_hwm} "
+              f"peak remote={stats.remote_pages_hwm} spills={stats.spills}")
+    return {"served": stats.served, "tpot": stats.tpot, "wall": wall,
+            "spills": stats.spills}
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.compat import get_abstract_mesh
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M
 from repro.optim import adamw
@@ -30,7 +31,7 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 def constrain_tree(tree, spec_tree):
     """with_sharding_constraint over a tree of PartitionSpecs; no-op when no
     abstract mesh is active (plain-CPU tests/drivers)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if spec_tree is None or mesh is None or not mesh.axis_names:
         return tree
     return jax.tree.map(

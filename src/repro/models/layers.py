@@ -13,6 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import get_abstract_mesh
 from repro.configs.base import ModelConfig
 
 Params = dict[str, Any]
@@ -27,7 +28,7 @@ Params = dict[str, Any]
 # --------------------------------------------------------------------------
 def hint(x: jax.Array, *spec: str | None) -> jax.Array:
     """spec entries: 'batch' | 'model' | None per dimension."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)
@@ -151,7 +152,10 @@ def _attend_dense(
         qpos = jnp.arange(tq)[:, None] + q_offset
         logits = jnp.where(spans <= qpos, logits, -1e30)
     if kv_len is not None:
-        logits = jnp.where(spans <= kv_len - 1, logits, -1e30)
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim == 1:                       # ragged batch: per-slot length
+            kvl = kvl[:, None, None, None, None]
+        logits = jnp.where(spans <= kvl - 1, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bgkts,bskh->btgkh", probs, v)
     return out.reshape(b, tq, h, vd)
@@ -213,18 +217,29 @@ def attention_decode(
     p: Params,
     k_cache: jax.Array,            # [B,S,K,hd]
     v_cache: jax.Array,
-    pos: jax.Array,                # scalar: index to write / last valid
+    pos: jax.Array,                # scalar (aligned batch) or [B] (ragged):
+                                   # index to write / last valid, per slot
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     hd = cfg.resolved_head_dim
+    pos = jnp.asarray(pos)
+    ragged = pos.ndim == 1
     q, k, v = qkv_project(cfg, x, p)
     q, k = _maybe_qk_norm(cfg, q, k, p)
     rot = int(hd * cfg.rope_fraction)
     if rot:
-        cos, sin = rope_cos_sin(pos[None], rot, cfg.rope_theta)
+        # [B,1,rot/2] when ragged (per-slot phase), [1,rot/2] when aligned —
+        # both broadcast over the head axis inside apply_rope.
+        cos, sin = rope_cos_sin(pos[:, None] if ragged else pos[None],
+                                rot, cfg.rope_theta)
         q = apply_rope(q, cos, sin, rot)
         k = apply_rope(k, cos, sin, rot)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    if ragged:
+        b = x.shape[0]
+        k_cache = k_cache.at[jnp.arange(b), pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[jnp.arange(b), pos].set(v[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
     out = attend(cfg, q, k_cache, v_cache, causal=False, kv_len=pos + 1)
     y = out.reshape(*x.shape[:2], cfg.padded_heads * hd) @ p["wo"]
     return y, k_cache, v_cache
@@ -402,13 +417,20 @@ def mla_decode(
     b = x.shape[0]
     h, nd, rd, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
     rank = cfg.kv_lora_rank
+    pos = jnp.asarray(pos)
+    ragged = pos.ndim == 1                                        # [B] per-slot
     q_nope, q_rope = mla_project_q(cfg, x, p)                     # [B,1,H,*]
     c_kv, k_rope = mla_project_kv_latent(cfg, x, p)               # [B,1,*]
-    cos, sin = rope_cos_sin(pos[None], rd, cfg.rope_theta)
+    cos, sin = rope_cos_sin(pos[:, None] if ragged else pos[None],
+                            rd, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin, rd)
     k_rope = apply_rope(k_rope[..., None, :], cos, sin, rd)[..., 0, :]
-    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
-    krope_cache = jax.lax.dynamic_update_slice(krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0))
+    if ragged:
+        ckv_cache = ckv_cache.at[jnp.arange(b), pos].set(c_kv[:, 0].astype(ckv_cache.dtype))
+        krope_cache = krope_cache.at[jnp.arange(b), pos].set(k_rope[:, 0].astype(krope_cache.dtype))
+    else:
+        ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+        krope_cache = jax.lax.dynamic_update_slice(krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0))
     # absorb W_uk into q: q_lat [B,H,rank].  wkv_b columns are laid out
     # per-head [nd | vd] (matching the reshape in mla_attention_block).
     w_full = p["wkv_b"].reshape(rank, h, nd + vd)
@@ -418,7 +440,8 @@ def mla_decode(
     logits = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache)
               + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], krope_cache)).astype(jnp.float32) * scale
     span = jnp.arange(ckv_cache.shape[1])[None, None, :]
-    logits = jnp.where(span <= pos, logits, -1e30)
+    last = pos[:, None, None] if ragged else pos
+    logits = jnp.where(span <= last, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache)          # [B,H,rank]
     out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(b, 1, h * vd)

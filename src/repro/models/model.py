@@ -429,7 +429,9 @@ def _hybrid_prefill(cfg: ModelConfig, params: Params, x, positions, pad):
 # ==========================================================================
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
                 tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, Cache]:
-    """tokens: [B,1] int32; pos: scalar int32 — absolute position to write."""
+    """tokens: [B,1] int32; pos: absolute position(s) to write — scalar
+    int32 for a slot-aligned batch, or [B] int32 for a ragged batch (each
+    slot writes/attends at its own length; SSM families ignore pos)."""
     x = params["embed"][tokens]
 
     if cfg.family == "hybrid":

@@ -1,12 +1,18 @@
 """Batched serving engine with DAK tiered offloading.
 
-Slot-based continuous batching: a fixed decode batch of ``max_batch`` slots;
-finished requests free their slot and the next queued request is prefilled
-into it.  Offloading is planned once at startup (OffloadEngine): weights are
-column-split per the per-op ratios and the KV cache is batch-split per the
-attention ratio; decode then runs the direct-access kernels
-(`serving.tiered_decode`) for dense archs, or the reference pjit path
-otherwise.
+Ragged continuous batching over a fixed pool of ``max_batch`` slots:
+requests are admitted into any free slot (no alignment requirement — every
+slot tracks its own KV length), decode steps take the per-slot ``lens``
+vector, and finished requests free their slot for the next queued request.
+
+Offloading is planned once at startup (OffloadEngine): weights are
+column-split per the per-op ratios, and the KV cache is a paged tiered
+cache (`serving.paged_cache.PagedTieredCache`) — fixed-size pages per slot,
+each page resident in HBM or host DRAM, with the planner's ``kv_ratio``
+realized as a page budget (`core.engine.kv_page_plan`).  Decode runs the
+direct-access kernels (`serving.tiered_decode.paged_tiered_decode_step`)
+for dense archs, or the reference pjit path (which also supports ragged
+per-slot positions) otherwise.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from repro.core.ebmodel import WorkloadSpec
 from repro.core.hardware import HardwareSpec, TPU_V5E
 from repro.models import model as M
 from repro.serving import tiered_decode as TD
+from repro.serving.paged_cache import PagedTieredCache
 
 
 @dataclasses.dataclass
@@ -45,6 +52,9 @@ class EngineStats:
     decode_steps: int = 0
     decode_time: float = 0.0
     prefill_time: float = 0.0
+    local_pages_hwm: int = 0               # peak pages resident per tier
+    remote_pages_hwm: int = 0
+    spills: int = 0                        # local->remote page migrations
 
     @property
     def tpot(self) -> float:
@@ -63,15 +73,17 @@ class ServingEngine:
         hbm_budget_bytes: float | None = None,
         global_offload_ratio: float | None = None,
         use_kernels: bool = True,
+        page_size: int = 8,
     ):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        self.page_size = page_size
         self.use_kernels = use_kernels and cfg.family in ("dense", "vlm")
         wl = WorkloadSpec(batch=max_batch, seq_len=max_len, phase="decode")
         self.plan = offload_engine.plan(
             cfg, wl, hw, hbm_budget_bytes=hbm_budget_bytes,
-            global_ratio=global_offload_ratio)
+            global_ratio=global_offload_ratio, kv_page_size=page_size)
         self.window = self.plan.window.n_inflight
         if self.use_kernels and self.plan.global_ratio > 0:
             self.params = TD.partition_dense_params(
@@ -83,11 +95,20 @@ class ServingEngine:
             self.tiered = False
 
         dtype = next(iter(jax.tree.leaves(params))).dtype
-        base = M.init_cache(cfg, max_batch, max_len, dtype)
         if self.tiered:
-            self.cache = TD.split_cache_batch(base, self.plan.kv_ratio)
+            pp = self.plan.kv_pages
+            self.pcache = PagedTieredCache(
+                cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim,
+                page_size=page_size,
+                local_pages=pp.local_pages,
+                remote_pages=pp.remote_pages,
+                max_slots=max_batch,
+                max_pages_per_slot=-(-max_len // page_size),
+                dtype=dtype)
+            self.cache = None
         else:
-            self.cache = base
+            self.pcache = None
+            self.cache = M.init_cache(cfg, max_batch, max_len, dtype)
         self.lens = np.zeros(max_batch, dtype=np.int32)     # per-slot kv length
         self.active: list[Request | None] = [None] * max_batch
         self.queue: deque[Request] = deque()
@@ -113,7 +134,7 @@ class ServingEngine:
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, cache1 = M.prefill(self.cfg, self.params_for_prefill(),
                                        {"tokens": tokens}, max_len=self.max_len)
-            self._write_slot_cache(slot, cache1)
+            self._write_slot_cache(slot, cache1, len(req.prompt))
             self.lens[slot] = len(req.prompt)
             nxt = int(jnp.argmax(logits[0, -1]))
             self._next_tok[slot, 0] = nxt
@@ -121,6 +142,7 @@ class ServingEngine:
             req.t_first = time.time()
             self.active[slot] = req
             self.stats.prefill_time += time.time() - t0
+            self._note_occupancy()
 
     def params_for_prefill(self) -> dict[str, Any]:
         """Prefill uses materialized weights (prefill is compute-bound; the
@@ -140,36 +162,55 @@ class ServingEngine:
             mat["lm_head"] = mat["lm_head"].materialize()
         return mat
 
-    def _write_slot_cache(self, slot: int, cache1: dict[str, jax.Array]) -> None:
+    def _write_slot_cache(self, slot: int, cache1: dict[str, jax.Array],
+                          prompt_len: int) -> None:
         if not self.tiered:
             for k in self.cache:
                 self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
             return
-        b_loc = self.cache["k_local"].shape[1]
-        for name in ("k", "v"):
-            if slot < b_loc:
-                self.cache[f"{name}_local"] = \
-                    self.cache[f"{name}_local"].at[:, slot].set(cache1[name][:, 0])
-            else:
-                self.cache[f"{name}_remote"] = \
-                    self.cache[f"{name}_remote"].at[:, slot - b_loc].set(cache1[name][:, 0])
+        self.pcache.write_prompt(
+            slot,
+            cache1["k"][:, 0, :prompt_len],
+            cache1["v"][:, 0, :prompt_len])
+
+    def _note_occupancy(self) -> None:
+        if self.pcache is None:
+            return
+        self.stats.local_pages_hwm = max(
+            self.stats.local_pages_hwm, self.pcache.local_in_use)
+        self.stats.remote_pages_hwm = max(
+            self.stats.remote_pages_hwm, self.pcache.remote_in_use)
+        self.stats.spills = self.pcache.spills
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One decode step for all active slots."""
+        """One decode step for all active slots (ragged: each slot at its
+        own position)."""
         self._admit()
-        if not any(self.active):
+        if not any(r is not None for r in self.active):
             return
-        pos = int(self.lens.max())          # static-shape engine: slots aligned
+        active = np.array([r is not None for r in self.active])
         tokens = jnp.asarray(self._next_tok)
+        positions = np.where(active, self.lens, 0).astype(np.int32)
         t0 = time.time()
         if self.tiered:
-            logits, self.cache = TD.tiered_decode_step(
-                self.cfg, self.params, self.cache, tokens, pos,
+            for slot in np.nonzero(active)[0]:
+                self.pcache.ensure_capacity(int(slot), int(self.lens[slot]) + 1)
+            self._note_occupancy()
+            wr_tier, wr_idx, wr_off = self.pcache.write_targets(self.lens, active)
+            table, tier = self.pcache.device_tables()
+            attn_lens = np.where(active, self.lens + 1, 0).astype(np.int32)
+            logits, self.pcache.pools = TD.paged_tiered_decode_step(
+                self.cfg, self.params, self.pcache.pools, tokens,
+                jnp.asarray(positions), jnp.asarray(attn_lens),
+                table, tier, wr_tier, wr_idx, wr_off,
+                sink_local=self.pcache.sink_local,
+                sink_remote=self.pcache.sink_remote,
                 window=self.window, use_kernel=True)
         else:
             logits, self.cache = M.decode_step(
-                self.cfg, self.params, self.cache, tokens, jnp.int32(pos))
+                self.cfg, self.params, self.cache, tokens,
+                jnp.asarray(positions))
         logits.block_until_ready()
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
@@ -188,12 +229,14 @@ class ServingEngine:
                 self.stats.served += 1
                 self.active[slot] = None
                 self.lens[slot] = 0
+                if self.pcache is not None:
+                    self.pcache.free_slot(slot)
             else:
                 self._next_tok[slot, 0] = tok
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
+        while (self.queue or any(r is not None for r in self.active)) and steps < max_steps:
             self.step()
             steps += 1
         return self.stats

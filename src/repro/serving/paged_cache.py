@@ -1,0 +1,234 @@
+"""Paged, tier-aware KV cache (serving-side DAK, paper §5).
+
+The slot-aligned batch-split cache (`tiered_decode.split_cache_batch`) pins a
+whole request to one tier, chosen once by batch position.  This module
+replaces it with fixed-size KV *pages*: each slot's cache is a list of pages
+of ``page_size`` tokens (covering all layers — the page table is shared
+across layers, vLLM-style, so tier migration moves a token-range of every
+layer together), and each page lives in either the local (HBM) or the remote
+(host) pool.  The planner's ``kv_ratio`` becomes a *page budget*: the local
+pool holds ``(1 - kv_ratio)`` of the total pages and the remote pool the
+rest (`core.engine.kv_page_plan`).
+
+Placement policy — hottest-first stays local: new pages (the tail of a
+sequence, rewritten/attended every step and still being filled) allocate
+from the local pool; when the local budget fills, the *coldest* local page
+(oldest allocation stamp, i.e. the earliest prompt tokens) spills to the
+remote pool to make room.  Finished requests return their pages to the free
+lists.
+
+Storage is a pair of jnp pools per K/V — ``[L, P+1, page, Kh, hd]`` — whose
+last page index is a write *sink*: decode steps scatter the new K/V row of
+every slot, and inactive slots are redirected to the sink page so the
+scatter stays a fixed-shape, mask-free op.  Metadata (page table, tiers,
+free lists, allocation stamps) is host-side numpy; the decode step receives
+device copies of the table via :meth:`device_tables`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOCAL, REMOTE = 0, 1
+
+
+class CacheFull(RuntimeError):
+    """No free page in either tier."""
+
+
+@dataclasses.dataclass
+class PageRef:
+    tier: int
+    index: int
+
+
+class PagedTieredCache:
+    def __init__(
+        self,
+        n_layers: int,
+        kv_heads: int,
+        head_dim: int,
+        *,
+        page_size: int,
+        local_pages: int,
+        remote_pages: int,
+        max_slots: int,
+        max_pages_per_slot: int,
+        dtype=jnp.float32,
+    ):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if local_pages + remote_pages < max_pages_per_slot:
+            raise ValueError(
+                f"pool of {local_pages}+{remote_pages} pages cannot hold one "
+                f"full-length sequence ({max_pages_per_slot} pages)")
+        self.page_size = page_size
+        self.n_local = local_pages
+        self.n_remote = remote_pages
+        self.max_slots = max_slots
+        self.max_pages = max_pages_per_slot
+        # +1 sink page at index n_{local,remote} (never allocated, never read)
+        self.pools: dict[str, jax.Array] = {
+            "k_local": jnp.zeros((n_layers, local_pages + 1, page_size, kv_heads, head_dim), dtype),
+            "v_local": jnp.zeros((n_layers, local_pages + 1, page_size, kv_heads, head_dim), dtype),
+            "k_remote": jnp.zeros((n_layers, remote_pages + 1, page_size, kv_heads, head_dim), dtype),
+            "v_remote": jnp.zeros((n_layers, remote_pages + 1, page_size, kv_heads, head_dim), dtype),
+        }
+        self.free: dict[int, list[int]] = {
+            LOCAL: list(range(local_pages)),
+            REMOTE: list(range(remote_pages)),
+        }
+        # table[slot, p] = pool index of the slot's p-th page; tier picks pool
+        self.table = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
+        self.tier = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
+        self.n_pages = np.zeros(max_slots, dtype=np.int32)
+        # hotness: allocation stamp per local page index (spill victim = min)
+        self._clock = 0
+        self._stamp: dict[int, int] = {}
+        self._owner: dict[int, tuple[int, int]] = {}   # local idx -> (slot, p)
+        self.spills = 0
+
+    # -- occupancy ---------------------------------------------------------
+    @property
+    def local_in_use(self) -> int:
+        return self.n_local - len(self.free[LOCAL])
+
+    @property
+    def remote_in_use(self) -> int:
+        return self.n_remote - len(self.free[REMOTE])
+
+    @property
+    def sink_local(self) -> int:
+        return self.n_local
+
+    @property
+    def sink_remote(self) -> int:
+        return self.n_remote
+
+    # -- allocation --------------------------------------------------------
+    def _spill_coldest_local(self) -> int:
+        """Migrate the coldest local page to the remote pool; return the
+        freed local index."""
+        if not self.free[REMOTE]:
+            raise CacheFull("both tiers exhausted")
+        victim = min(self._stamp, key=self._stamp.get)
+        dst = self.free[REMOTE].pop()
+        for name in ("k", "v"):
+            pool_l, pool_r = self.pools[f"{name}_local"], self.pools[f"{name}_remote"]
+            self.pools[f"{name}_remote"] = pool_r.at[:, dst].set(pool_l[:, victim])
+        slot, p = self._owner.pop(victim)
+        del self._stamp[victim]
+        self.table[slot, p] = dst
+        self.tier[slot, p] = REMOTE
+        self.spills += 1
+        return victim
+
+    def alloc(self, slot: int) -> PageRef:
+        """Append one page to `slot`. New pages are the hottest (they hold
+        the sequence tail) so they claim the local tier, spilling the coldest
+        local page to remote when the local budget is full."""
+        p = int(self.n_pages[slot])
+        if p >= self.max_pages:
+            raise CacheFull(f"slot {slot} already at max_pages={self.max_pages}")
+        if self.free[LOCAL]:
+            idx = self.free[LOCAL].pop()
+            tier = LOCAL
+        elif self.n_local > 0:
+            idx = self._spill_coldest_local()
+            tier = LOCAL
+        elif self.free[REMOTE]:
+            idx = self.free[REMOTE].pop()
+            tier = REMOTE
+        else:
+            raise CacheFull("both tiers exhausted")
+        if tier == LOCAL:
+            self._clock += 1
+            self._stamp[idx] = self._clock
+            self._owner[idx] = (slot, p)
+        self.table[slot, p] = idx
+        self.tier[slot, p] = tier
+        self.n_pages[slot] = p + 1
+        return PageRef(tier, idx)
+
+    def ensure_capacity(self, slot: int, length: int) -> None:
+        """Allocate pages until `slot` can hold `length` tokens."""
+        need = -(-length // self.page_size)
+        while self.n_pages[slot] < need:
+            self.alloc(slot)
+
+    def free_slot(self, slot: int) -> None:
+        for p in range(int(self.n_pages[slot])):
+            idx, tier = int(self.table[slot, p]), int(self.tier[slot, p])
+            self.free[tier].append(idx)
+            if tier == LOCAL:
+                self._stamp.pop(idx, None)
+                self._owner.pop(idx, None)
+        self.table[slot] = 0
+        self.tier[slot] = 0
+        self.n_pages[slot] = 0
+
+    # -- data movement -----------------------------------------------------
+    def write_prompt(self, slot: int, k: jax.Array, v: jax.Array) -> None:
+        """Write a prefilled KV block (k, v: [L, T, Kh, hd]) into `slot`'s
+        pages, allocating as needed.  One batched scatter per (tier, K/V)
+        rather than per page — each functional `.at[].set` copies the whole
+        pool, so per-page updates would cost O(n_pages x pool bytes)."""
+        t = k.shape[1]
+        self.ensure_capacity(slot, t)
+        ps = self.page_size
+        n_pages = -(-t // ps)
+        pad = n_pages * ps - t
+        if pad:  # zero-fill the final partial page's tail (masked by lens)
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nl = k.shape[0]
+        kp = k.reshape(nl, n_pages, ps, *k.shape[2:])
+        vp = v.reshape(nl, n_pages, ps, *v.shape[2:])
+        for tier, suffix in ((LOCAL, "local"), (REMOTE, "remote")):
+            sel = [p for p in range(n_pages) if self.tier[slot, p] == tier]
+            if not sel:
+                continue
+            idx = self.table[slot, sel]
+            for name, src in (("k", kp), ("v", vp)):
+                pool = self.pools[f"{name}_{suffix}"]
+                self.pools[f"{name}_{suffix}"] = \
+                    pool.at[:, idx].set(src[:, sel].astype(pool.dtype))
+
+    def gather(self, slot: int, length: int) -> tuple[jax.Array, jax.Array]:
+        """Reconstruct the dense [L, length, Kh, hd] K and V for `slot`
+        (testing / debugging; the decode path gathers inside the kernel)."""
+        ps = self.page_size
+        ks, vs = [], []
+        for p in range(-(-length // ps)):
+            idx, tier = int(self.table[slot, p]), int(self.tier[slot, p])
+            suffix = "local" if tier == LOCAL else "remote"
+            n = min(ps, length - p * ps)
+            ks.append(self.pools[f"k_{suffix}"][:, idx, :n])
+            vs.append(self.pools[f"v_{suffix}"][:, idx, :n])
+        if not ks:
+            l_, _, _, kh, hd = self.pools["k_local"].shape
+            z = jnp.zeros((l_, 0, kh, hd), self.pools["k_local"].dtype)
+            return z, z
+        return jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1)
+
+    # -- device-side views -------------------------------------------------
+    def device_tables(self) -> tuple[jax.Array, jax.Array]:
+        return jnp.asarray(self.table), jnp.asarray(self.tier)
+
+    def write_targets(
+        self, lens: np.ndarray, active: np.ndarray
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Per-slot (tier, pool index, in-page offset) for writing token
+        ``lens[slot]``; inactive slots are redirected to the local sink page.
+        Callers must have run :meth:`ensure_capacity` for active slots."""
+        slots = np.arange(self.max_slots)
+        p_c = np.minimum(lens // self.page_size, self.max_pages - 1)
+        tier = np.where(active, self.tier[slots, p_c], LOCAL)
+        idx = np.where(active, self.table[slots, p_c], self.sink_local)
+        off = np.where(active, lens % self.page_size, 0)
+        return (jnp.asarray(tier.astype(np.int32)),
+                jnp.asarray(idx.astype(np.int32)),
+                jnp.asarray(off.astype(np.int32)))

@@ -2,9 +2,19 @@
 
 This is the serving-side integration of DAK: every large linear operand is
 a `TieredArray` (column-split per the planner's per-op ratios) computed by
-`SplitK_GEMM`, and the KV cache is batch-split across tiers and attended by
-`SplitK_FlashAttn` — both with the congestion window from the plan.  This
-path runs real kernels (interpret mode on CPU) and is exercised by
+`SplitK_GEMM`, and the KV cache is attended by `SplitK_FlashAttn` — both
+with the congestion window from the plan.  Two cache layouts are supported:
+
+* ``tiered_decode_step`` — the paper's original batch-split layout
+  (`split_cache_batch`): a slot-aligned batch whose prefix lives in HBM and
+  whose suffix lives on the host, all slots sharing one position.
+* ``paged_tiered_decode_step`` — the paged layout
+  (`serving.paged_cache.PagedTieredCache`): per-slot page tables whose
+  pages are individually tagged local/remote, per-slot lengths (ragged
+  continuous batching), attention via the page-table-indexed gather kernel
+  (`kernels.splitk_flashattn.paged_splitk_flashattn`).
+
+Both run real kernels (interpret mode on CPU) and are exercised by
 examples/serve_offload.py and the serving tests; the pjit path
 (models.decode_step) remains the large-scale route.
 
@@ -13,7 +23,7 @@ models); MoE/SSM serving uses the reference path.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -77,20 +87,23 @@ def split_cache_batch(cache: dict[str, jax.Array], kv_ratio: float,
     }
 
 
-def tiered_decode_step(
+# --------------------------------------------------------------------------
+# Shared decode transformer body.  The cache layouts differ only in how the
+# new K/V row is written and how attention gathers the cache, so both steps
+# share this body and inject a `write_and_attend(layer, q, k_new, v_new)`
+# callback (q [B,Hp,hd]; k_new/v_new [B,1,Kh,hd]; returns attn [B,Hp,hd]).
+# --------------------------------------------------------------------------
+def _decode_transformer(
     cfg: ModelConfig,
-    params: dict[str, Any],          # from partition_dense_params
-    cache: dict[str, Any],           # from split_cache_batch
+    params: dict[str, Any],
     tokens: jax.Array,               # [B,1] int32
-    pos: int,
-    *,
-    window: int = 2,
-    use_kernel: bool = True,
-) -> tuple[jax.Array, dict[str, Any]]:
-    """One decode step over tiered weights + tiered KV (dense archs)."""
+    positions: jax.Array,            # [B] int32 per-slot write positions
+    window: int,
+    use_kernel: bool,
+    write_and_attend: Callable[[int, jax.Array, jax.Array, jax.Array], jax.Array],
+) -> jax.Array:
     hd = cfg.resolved_head_dim
     hp, kv_h = cfg.padded_heads, cfg.n_kv_heads
-    b_loc = cache["k_local"].shape[1]
     x = params["embed"][tokens]                       # [B,1,d]
     b = x.shape[0]
 
@@ -110,30 +123,10 @@ def tiered_decode_step(
             k_new = L.rmsnorm(k_new, lp["k_norm_w"], cfg.norm_eps)
         rot = int(hd * cfg.rope_fraction)
         if rot:
-            cos, sin = L.rope_cos_sin(jnp.asarray([pos]), rot, cfg.rope_theta)
+            cos, sin = L.rope_cos_sin(positions[:, None], rot, cfg.rope_theta)
             q = L.apply_rope(q, cos, sin, rot)
             k_new = L.apply_rope(k_new, cos, sin, rot)
-        # write the new K/V row into the right tier slice at `pos`
-        if b_loc > 0:
-            cache["k_local"] = jax.lax.dynamic_update_slice(
-                cache["k_local"], _layer_row(k_new[:b_loc], i, cache["k_local"]),
-                (i, 0, pos, 0, 0))
-            cache["v_local"] = jax.lax.dynamic_update_slice(
-                cache["v_local"], _layer_row(v_new[:b_loc], i, cache["v_local"]),
-                (i, 0, pos, 0, 0))
-        if b_loc < b:
-            cache["k_remote"] = jax.lax.dynamic_update_slice(
-                cache["k_remote"], _layer_row(k_new[b_loc:], i, cache["k_remote"]),
-                (i, 0, pos, 0, 0))
-            cache["v_remote"] = jax.lax.dynamic_update_slice(
-                cache["v_remote"], _layer_row(v_new[b_loc:], i, cache["v_remote"]),
-                (i, 0, pos, 0, 0))
-        attn = ops.tiered_decode_attention(
-            q[:, 0],
-            {"k_local": cache["k_local"][i], "v_local": cache["v_local"][i],
-             "k_remote": cache["k_remote"][i], "v_remote": cache["v_remote"][i]},
-            kv_len=pos + 1, window=window, use_kernel=use_kernel,
-        )[:, None]                                    # [B,1,Hp,hd]
+        attn = write_and_attend(i, q[:, 0], k_new, v_new)[:, None]  # [B,1,Hp,hd]
         x = x + _mm(attn.reshape(b, 1, hp * hd), lp["wo"], window, use_kernel)
         hn2 = L.norm(cfg, x, lp, "ln2")
         if cfg.mlp == "swiglu":
@@ -152,10 +145,98 @@ def tiered_decode_step(
 
     xn = (L.layernorm(x, params["final_w"], params["final_b"], cfg.norm_eps)
           if cfg.norm == "layernorm" else L.rmsnorm(x, params["final_w"], cfg.norm_eps))
-    logits = _mm(xn, params["lm_head"], window, use_kernel)
+    return _mm(xn, params["lm_head"], window, use_kernel)
+
+
+def tiered_decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],          # from partition_dense_params
+    cache: dict[str, Any],           # from split_cache_batch
+    tokens: jax.Array,               # [B,1] int32
+    pos: int,
+    *,
+    window: int = 2,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """One slot-aligned decode step over tiered weights + batch-split KV."""
+    b = tokens.shape[0]
+    b_loc = cache["k_local"].shape[1]
+
+    def write_and_attend(i, q, k_new, v_new):
+        if b_loc > 0:
+            cache["k_local"] = jax.lax.dynamic_update_slice(
+                cache["k_local"], _layer_row(k_new[:b_loc], cache["k_local"]),
+                (i, 0, pos, 0, 0))
+            cache["v_local"] = jax.lax.dynamic_update_slice(
+                cache["v_local"], _layer_row(v_new[:b_loc], cache["v_local"]),
+                (i, 0, pos, 0, 0))
+        if b_loc < b:
+            cache["k_remote"] = jax.lax.dynamic_update_slice(
+                cache["k_remote"], _layer_row(k_new[b_loc:], cache["k_remote"]),
+                (i, 0, pos, 0, 0))
+            cache["v_remote"] = jax.lax.dynamic_update_slice(
+                cache["v_remote"], _layer_row(v_new[b_loc:], cache["v_remote"]),
+                (i, 0, pos, 0, 0))
+        return ops.tiered_decode_attention(
+            q,
+            {"k_local": cache["k_local"][i], "v_local": cache["v_local"][i],
+             "k_remote": cache["k_remote"][i], "v_remote": cache["v_remote"][i]},
+            kv_len=pos + 1, window=window, use_kernel=use_kernel)
+
+    positions = jnp.full((b,), pos, jnp.int32)
+    logits = _decode_transformer(
+        cfg, params, tokens, positions, window, use_kernel, write_and_attend)
     return logits, cache
 
 
-def _layer_row(new: jax.Array, layer: int, cache_ref: jax.Array) -> jax.Array:
-    """[Bpart,1,K,hd] -> [1,Bpart,1,K,hd] update block for layer `layer`."""
+def paged_tiered_decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],          # from partition_dense_params
+    pools: dict[str, jax.Array],     # PagedTieredCache.pools {k,v}_{local,remote}
+    tokens: jax.Array,               # [B,1] int32
+    positions: jax.Array,            # [B] int32 — per-slot write position
+    attn_lens: jax.Array,            # [B] int32 — post-write lengths (0 = idle)
+    table: jax.Array,                # [B, MP] int32 page table
+    tier: jax.Array,                 # [B, MP] int32 page tiers
+    wr_tier: jax.Array,              # [B] int32 write-target tier
+    wr_idx: jax.Array,               # [B] int32 write-target page index
+    wr_off: jax.Array,               # [B] int32 in-page offset
+    *,
+    sink_local: int,
+    sink_remote: int,
+    window: int = 2,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One ragged decode step over tiered weights + paged tiered KV.
+
+    Every slot scatters its new K/V row into the page named by
+    (wr_tier, wr_idx, wr_off); idle slots must be pointed at a sink page by
+    the caller.  Attention gathers each slot's pages from the tier its page
+    table names and masks to ``attn_lens`` (ragged batch)."""
+    pools = dict(pools)
+
+    def write_and_attend(i, q, k_new, v_new):
+        # Scatter into both pools; the slot's row goes to its real target in
+        # one tier and to that tier's sink in the other (never read back).
+        idx_l = jnp.where(wr_tier == 0, wr_idx, sink_local)
+        idx_r = jnp.where(wr_tier == 1, wr_idx, sink_remote)
+        for name, new in (("k", k_new), ("v", v_new)):
+            row = new[:, 0]
+            pl_ = pools[f"{name}_local"]
+            pools[f"{name}_local"] = pl_.at[i, idx_l, wr_off].set(row.astype(pl_.dtype))
+            pr_ = pools[f"{name}_remote"]
+            pools[f"{name}_remote"] = pr_.at[i, idx_r, wr_off].set(row.astype(pr_.dtype))
+        layer_pools = {name: pools[name][i] for name in
+                       ("k_local", "v_local", "k_remote", "v_remote")}
+        return ops.paged_decode_attention(
+            q, layer_pools, table, tier, attn_lens,
+            window=window, use_kernel=use_kernel)
+
+    logits = _decode_transformer(
+        cfg, params, tokens, positions, window, use_kernel, write_and_attend)
+    return logits, pools
+
+
+def _layer_row(new: jax.Array, cache_ref: jax.Array) -> jax.Array:
+    """[Bpart,1,K,hd] -> [1,Bpart,1,K,hd] update block."""
     return new.astype(cache_ref.dtype)[None]

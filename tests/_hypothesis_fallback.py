@@ -1,0 +1,88 @@
+"""Seeded-random fallback driver for environments without `hypothesis`.
+
+Implements just enough of the hypothesis API surface used by this repo's
+property tests (`given` / `settings` / a handful of strategies) so test
+collection never errors when the real package is absent.  Draws come from a
+``numpy`` Generator seeded from the test name, so failures are reproducible.
+Install `hypothesis` (see requirements-dev.txt) to get real shrinking and
+edge-case generation.
+"""
+from __future__ import annotations
+
+
+import types
+import zlib
+
+import numpy as np
+
+_FALLBACK_MAX_EXAMPLES = 25      # keep the fallback sweep fast
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw         # draw(rng) -> value
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def builds(target, **kwargs) -> _Strategy:
+    def draw(rng):
+        resolved = {k: (v.draw(rng) if isinstance(v, _Strategy) else v)
+                    for k, v in kwargs.items()}
+        return target(**resolved)
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 50, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", 50), _FALLBACK_MAX_EXAMPLES)
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        # Deliberately NOT functools.wraps: the wrapper must present a
+        # zero-arg signature or pytest mistakes the drawn parameters for
+        # fixtures.
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(**drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+hypothesis = types.SimpleNamespace(given=given, settings=settings)
+st = types.SimpleNamespace(
+    floats=floats, integers=integers, just=just,
+    sampled_from=sampled_from, lists=lists, builds=builds,
+)

@@ -105,6 +105,56 @@ def test_multi_step_decode(arch):
     assert int(jnp.argmax(full[0, -1])) == seq[-1]
 
 
+@pytest.mark.parametrize("arch", [a for a in C.ARCH_IDS
+                                  if C.get_smoke(a).has_decoder])
+def test_ragged_decode_matches_per_request(arch):
+    """decode_step with a [B] position vector (ragged continuous batch) must
+    reproduce per-request scalar-position decoding exactly at each slot."""
+    cfg = _smoke(arch)
+    params = M.init_params(cfg, KEY)
+    s_max, n_steps = 20, 2
+    lens0 = [5, 11, 8]
+    b = len(lens0)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (1, t), 0, cfg.vocab)
+               for i, t in enumerate(lens0)]
+
+    # per-request reference: scalar positions, batch of one
+    ref_logits = []
+    for pr in prompts:
+        lg, cache = M.prefill(cfg, params, {"tokens": pr}, max_len=s_max)
+        tok = int(jnp.argmax(lg[0, -1]))
+        pos = pr.shape[1]
+        per_step = []
+        for _ in range(n_steps):
+            lg, cache = M.decode_step(cfg, params, cache,
+                                      jnp.asarray([[tok]], jnp.int32),
+                                      jnp.int32(pos))
+            per_step.append(lg[0, 0])
+            tok = int(jnp.argmax(lg[0, 0]))
+            pos += 1
+        ref_logits.append(per_step)
+
+    # ragged batch: all three requests share one cache, per-slot positions
+    cache = M.init_cache(cfg, b, s_max)
+    lens = np.array(lens0, np.int32)
+    nxt = np.zeros((b, 1), np.int32)
+    for slot, pr in enumerate(prompts):
+        lg, c1 = M.prefill(cfg, params, {"tokens": pr}, max_len=s_max)
+        for k in cache:
+            cache[k] = cache[k].at[:, slot].set(c1[k][:, 0])
+        nxt[slot, 0] = int(jnp.argmax(lg[0, -1]))
+    for step in range(n_steps):
+        lg, cache = M.decode_step(cfg, params, cache, jnp.asarray(nxt),
+                                  jnp.asarray(lens))
+        for slot in range(b):
+            want = ref_logits[slot][step]
+            err = float(jnp.max(jnp.abs(lg[slot, 0] - want))
+                        / (jnp.max(jnp.abs(want)) + 1e-9))
+            assert err < 1e-4, f"{arch} slot {slot} step {step}: {err:.1e}"
+            nxt[slot, 0] = int(jnp.argmax(lg[slot, 0]))
+        lens += 1
+
+
 def test_ssd_chunked_matches_recurrence():
     """SSD dual (chunked) form == naive recurrent scan."""
     b, t, h, p, g, s = 2, 64, 4, 8, 1, 16

@@ -1,8 +1,11 @@
 """Greedy offload planner: optimality (paper Thms 1-3) + invariants."""
 from __future__ import annotations
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:              # seeded-random fallback driver
+    from _hypothesis_fallback import hypothesis, st
 import numpy as np
 import pytest
 

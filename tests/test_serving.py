@@ -77,6 +77,90 @@ def test_engine_continuous_batching_overlap():
     assert stats.served == 4
 
 
+def _reference_tokens(cfg, params, prompt, new_tokens, max_len):
+    """Per-request greedy decoding on the plain (batch-1) reference path."""
+    logits, cache = M.prefill(cfg, params, {"tokens": prompt[None, :]},
+                              max_len=max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = prompt.shape[0]
+    while len(toks) < new_tokens:
+        logits, cache = M.decode_step(
+            cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+            jnp.int32(pos))
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    return toks
+
+
+@pytest.mark.parametrize("ratio", [0.0, 0.5])
+def test_engine_ragged_matches_reference(ratio):
+    """Acceptance: mixed prompt lengths through the continuous-batching
+    engine produce exactly the per-request reference tokens, and (tiered
+    runs) pages are resident in both tiers along the way."""
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=32,
+                        global_offload_ratio=ratio, page_size=4)
+    rng = np.random.default_rng(7)
+    # lengths sized so concurrent pages exceed the 0.5-ratio local budget
+    # (3 slots x up to 6 pages vs 12 local pages) — forcing tier spills
+    prompts = [rng.integers(3, cfg.vocab, n).astype(np.int32)
+               for n in (10, 16, 7, 14, 9)]
+    new_tokens = 8
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=new_tokens))
+    reqs = list(eng.queue)
+    stats = eng.run()
+    assert stats.served == len(prompts)
+    for req in reqs:
+        want = _reference_tokens(cfg, params, jnp.asarray(req.prompt),
+                                 new_tokens, 32)
+        assert req.out_tokens == want, f"request {req.rid} diverged"
+    if ratio > 0:
+        assert stats.local_pages_hwm >= 1, "no page ever resident in HBM tier"
+        assert stats.remote_pages_hwm >= 1, "no page ever resident in host tier"
+
+
+def test_engine_ragged_admission_not_aligned():
+    """Slots admitted mid-flight keep their own positions (the old engine
+    forced pos = lens.max(), corrupting shorter slots' caches)."""
+    cfg = C.get_smoke("starcoder2_3b")
+    params = M.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                        global_offload_ratio=0.5, page_size=4)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(3, cfg.vocab, n).astype(np.int32)
+               for n in (4, 11, 6)]
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+    reqs = list(eng.queue)
+    eng.run()
+    for req in reqs:
+        want = _reference_tokens(cfg, params, jnp.asarray(req.prompt), 4, 32)
+        assert req.out_tokens == want, f"request {req.rid} diverged"
+
+
+def test_kv_page_plan_budgets():
+    """kv_ratio -> page budget: tier guarantees hold for multi-page pools,
+    the single-page pool rounds, and the achieved ratio tracks the plan."""
+    cfg = C.get_smoke("llama2_7b")
+    wl = WorkloadSpec(batch=4, seq_len=32, phase="decode")
+    for ratio in (0.0, 0.01, 0.3, 0.5, 0.99, 1.0):
+        pp = offload_engine.kv_page_plan(cfg, wl, ratio, page_size=4)
+        assert pp.local_pages + pp.remote_pages == pp.total_pages == 4 * 8
+        if 0 < ratio:
+            assert pp.remote_pages >= 1
+        if ratio < 1:
+            assert pp.local_pages >= 1
+        assert abs(pp.achieved_kv_ratio - ratio) <= 1.0 / pp.total_pages
+    # degenerate single-page pool: can't honor both tier floors — rounds
+    one = WorkloadSpec(batch=1, seq_len=8, phase="decode")
+    assert offload_engine.kv_page_plan(cfg, one, 0.5, page_size=8).remote_pages == 1
+    assert offload_engine.kv_page_plan(cfg, one, 0.4, page_size=8).remote_pages == 0
+    with pytest.raises(ValueError):
+        offload_engine.kv_page_plan(cfg, wl, 0.5, page_size=0)
+
+
 def test_plan_respects_budget():
     """Fig. 10 mode: global ratio derived from a real HBM budget."""
     cfg = C.get("opt_30b")

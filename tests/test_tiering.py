@@ -1,8 +1,11 @@
 """TieredArray partitioning invariants + congestion/multicast models."""
 from __future__ import annotations
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:              # seeded-random fallback driver
+    from _hypothesis_fallback import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
