@@ -4,11 +4,11 @@ from repro.core.ebmodel import OpProfile, WorkloadSpec
 from repro.core.engine import TieringPlan, plan
 from repro.core.hardware import GH200, RTX6000_BLACKWELL, SYSTEMS, TPU_V5E, HardwareSpec
 from repro.core.planner import OffloadPlan, solve, solve_uniform
-from repro.core.tiering import TieredArray, partition, partition_tree
+from repro.core.tiering import TieredArray, matmul, partition, partition_tree
 
 __all__ = [
     "congestion", "ebmodel", "engine", "hardware", "multicast", "planner", "tiering",
     "OpProfile", "WorkloadSpec", "TieringPlan", "plan",
     "GH200", "RTX6000_BLACKWELL", "SYSTEMS", "TPU_V5E", "HardwareSpec",
-    "OffloadPlan", "solve", "solve_uniform", "TieredArray", "partition", "partition_tree",
+    "OffloadPlan", "solve", "solve_uniform", "TieredArray", "matmul", "partition", "partition_tree",
 ]

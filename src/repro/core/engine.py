@@ -6,18 +6,29 @@ Given (model config, workload, hardware), the engine:
   2. computes the memory footprint and the *global* offload ratio
      ``OR = max(0, 1 − HBM_avail / footprint)``,
   3. runs the provably-optimal greedy allocator for per-op ratios,
-  4. emits a `TieringPlan`: per-parameter-group offload ratios (by path
-     pattern) + the KV-cache ratio + congestion window + broadcast plan,
-     ready to be applied to a param pytree via `tiering.partition_tree`.
+  4. emits a `TieringPlan` carrying the model family's *operand registry*
+     (`models.registry`) alongside the per-op ratios, the KV page budget,
+     the congestion window, and the broadcast plan.
+
+``TieringPlan.partition(params)`` is the single entry point that realizes
+the plan on a param pytree: every registered operand whose planner op
+carries a non-zero ratio becomes a `TieredArray`, split along the axis the
+registry declares.  This is the unified path for every model family —
+dense, VLM, MoE (expert-stack splits), MLA (latent projections), SSM and
+hybrid — replacing the former trio of ``_OP_TO_PARAM``,
+``tiering.partition_tree`` path patterns, and the serving-side ``TIERABLE``
+list.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
-from repro.core import congestion, multicast, planner
+from repro.core import congestion, multicast, planner, tiering
 from repro.core.ebmodel import OpProfile, WorkloadSpec, attention_op, linear_op
 from repro.core.hardware import HardwareSpec
 from repro.configs.base import ModelConfig
+from repro.models.registry import Operand, operand_registry, resolve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +52,7 @@ class KVPagePlan:
 class TieringPlan:
     global_ratio: float
     op_ratios: dict[str, float]            # op name -> ratio
-    param_ratios: dict[str, float]         # param path pattern -> ratio
+    param_ratios: dict[str, float]         # param path ('/'-joined) -> ratio
     kv_ratio: float
     latency: float                         # modelled e2e step latency (s)
     effective_bandwidth: float             # modelled aggregate EB (bytes/s)
@@ -50,20 +61,56 @@ class TieringPlan:
     footprint_bytes: float
     ops: tuple[OpProfile, ...] = ()
     kv_pages: KVPagePlan | None = None     # page budget realizing kv_ratio
+    registry: tuple[Operand, ...] = ()     # operand registry (models.registry)
+    prefill_op_ratios: dict[str, float] | None = None  # prefill-phase solve
+
+    def partition(self, params: dict[str, Any], *, align: int = 1,
+                  place_remote: bool = False) -> dict[str, Any]:
+        """Realize the plan on a params pytree (the unified tiering API).
+
+        Every operand in the registry whose planner op carries a non-zero
+        offload ratio is split into a `TieredArray` along the registry's
+        declared axis; all other leaves pass through untouched, so the
+        returned tree has the same structure and flows through
+        ``jit``/``scan``/the serving layer loop unchanged.
+
+        ``align`` rounds split extents to kernel-tile multiples (paper §4.1
+        execution-wave alignment); a per-operand registry override (e.g.
+        MoE expert stacks split whole experts, align 1) takes precedence.
+        Operands whose rounded remote extent is zero stay plain arrays.
+        The physical split follows the *decode-phase* ratios: a weight can
+        only live in one place, and decode is the steady state — prefill
+        streams the same remote partitions (see ``prefill_op_ratios`` for
+        the prefill-phase accounting solve).  With ``place_remote`` the
+        remote tier is pinned to host memory on backends that support it.
+        """
+        out = _copy_tree(params)
+        for od in self.registry:
+            ratio = self.op_ratios.get(od.op, 0.0)
+            if ratio <= 0.0:
+                continue
+            leaf = resolve(params, od.path)
+            align_eff = od.align if od.align is not None else align
+            _, n_remote = tiering.split_sizes(leaf.shape[od.axis], ratio, align_eff)
+            if n_remote == 0:
+                continue
+            t = tiering.partition(leaf, ratio, axis=od.axis, align=align_eff)
+            if place_remote:
+                t = tiering.place(t)
+            _set_path(out, od.path, t)
+        return out
 
 
-# Map op names -> param path patterns used by models/transformer.py params.
-_OP_TO_PARAM = {
-    "attn_qkv": "wq",
-    "attn_out": "wo",
-    "mlp_up": "wi",
-    "mlp_down": "wdown",
-    "moe_experts": "experts",
-    "moe_shared": "shared",
-    "lm_head": "lm_head",
-    "ssm_in": "x_proj",
-    "ssm_out": "ssm_out",
-}
+def _copy_tree(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    return tree
+
+
+def _set_path(tree: dict[str, Any], path: tuple[str, ...], value: Any) -> None:
+    for key in path[:-1]:
+        tree = tree[key]
+    tree[path[-1]] = value
 
 
 def enumerate_ops(cfg: ModelConfig, wl: WorkloadSpec) -> list[OpProfile]:
@@ -212,11 +259,24 @@ def plan(
     )
     total_c = sum(op.bytes for op in ops)
     kv_ratio = op_ratios.get("attention", 0.0)
+    registry = operand_registry(cfg)
+
+    # Prefill-phase solve (paper: per-phase boundness => per-phase ratios).
+    # The physical weight split realizes the decode ratios (see
+    # TieringPlan.partition); the prefill solve prices streaming the same
+    # remote partitions during the compute-bound prefill phase.
+    prefill_op_ratios: dict[str, float] | None = None
+    if wl.phase == "decode" and cfg.has_decoder:
+        ops_pre = enumerate_ops(cfg, dataclasses.replace(wl, phase="prefill"))
+        sol_pre = planner.solve(ops_pre, global_ratio, hw)
+        prefill_op_ratios = {
+            op.name: r for op, r in zip(ops_pre, sol_pre.ratios, strict=True)}
+
     return TieringPlan(
         global_ratio=global_ratio,
         op_ratios=op_ratios,
         param_ratios={
-            pat: op_ratios[name] for name, pat in _OP_TO_PARAM.items() if name in op_ratios
+            od.path_str: op_ratios[od.op] for od in registry if od.op in op_ratios
         },
         kv_ratio=kv_ratio,
         latency=sol.latency,
@@ -226,4 +286,6 @@ def plan(
         footprint_bytes=footprint,
         ops=tuple(ops),
         kv_pages=kv_page_plan(cfg, wl, kv_ratio, page_size=kv_page_size),
+        registry=registry,
+        prefill_op_ratios=prefill_op_ratios,
     )

@@ -76,11 +76,36 @@ class TieredArray:
 
 
 def partition(x: jax.Array, ratio: float, axis: int = 0, align: int = 1) -> TieredArray:
-    """Split `x` along `axis`: trailing `ratio` fraction goes to the host tier."""
+    """Split `x` along `axis`: trailing `ratio` fraction goes to the host tier.
+
+    Negative axes are supported (and preferred by the operand registry —
+    `models.registry`): a negative split axis stays valid when a leading
+    stacking axis is peeled off by ``jax.lax.scan`` or a per-layer slice.
+    """
     dim = x.shape[axis]
     n_local, n_remote = split_sizes(dim, ratio, align)
     local, remote = jnp.split(x, [n_local], axis=axis)
     return TieredArray(local=local, remote=remote, axis=axis)
+
+
+def matmul(x: jax.Array, w: Any) -> jax.Array:
+    """``x @ w`` with operand-type dispatch on tiered weights.
+
+    The unified tiering API's reference-semantics compute op: plain arrays
+    pass straight through to ``@``; a column-split `TieredArray` computes
+    each tier from its own buffer and concatenates the outputs — on a real
+    runtime the remote matmul streams its operand over the host link (the
+    `SplitK_GEMM` kernel in `kernels.ops.tiered_matmul` is the direct-access
+    realization of the same contraction).  Used throughout `models.layers`
+    so every model family's forward/prefill/decode accepts tiered params.
+    """
+    if isinstance(w, TieredArray):
+        if w.axis not in (-1, w.local.ndim - 1):
+            raise ValueError(
+                f"tier-aware matmul supports column-split operands only "
+                f"(axis=-1), got axis={w.axis} for shape {w.shape}")
+        return jnp.concatenate([x @ w.local, x @ w.remote], axis=-1)
+    return x @ w
 
 
 def place(t: TieredArray, device: Any | None = None) -> TieredArray:
@@ -102,6 +127,12 @@ def partition_tree(
     params: Any, ratios: dict[str, float], align: int = 1, axis: int = 0
 ) -> Any:
     """Partition every param whose path matches a ratio entry.
+
+    .. deprecated::
+        Path-pattern partitioning predates the operand registry; use
+        ``TieringPlan.partition`` (`core.engine`), which resolves leaves,
+        split axes, and alignment from `models.registry.operand_registry`.
+        Kept for one release as a low-level escape hatch.
 
     `ratios` maps '/'-joined key-paths (as produced by
     ``jax.tree_util.keystr``-lite below) to offload ratios. Params without a

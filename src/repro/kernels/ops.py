@@ -61,7 +61,9 @@ def tiered_matmul(
     k = x.shape[-1]
     n_loc, n_rem = wl.shape[1], wr.shape[1]
     aligned = (n_loc % block_n == 0) and (n_rem % block_n == 0)
-    if not use_kernel or not aligned:
+    # Degenerate tiers (fully local / fully remote operand) take the oracle:
+    # the kernel grid assumes both partitions are non-empty.
+    if not use_kernel or not aligned or n_loc == 0 or n_rem == 0:
         return ref.splitk_gemm_ref(x.reshape(-1, k), wl, wr).reshape(*lead, n_loc + n_rem)
 
     x2 = x.reshape(-1, k)
@@ -104,17 +106,20 @@ def paged_decode_attention(
     lens: jax.Array,                   # [B] int32 — valid tokens per slot (ragged)
     *,
     window: int = 2,
+    scale: float | None = None,
     use_kernel: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Ragged paged tiered decode attention (per-slot kv lengths; each page
-    fetched from the tier its page-table entry names)."""
+    fetched from the tier its page-table entry names).  ``scale`` overrides
+    the ``hd**-0.5`` softmax scale (MLA latent-width pages)."""
     kl, vl = pools["k_local"], pools["v_local"]
     kr, vr = pools["k_remote"], pools["v_remote"]
     if not use_kernel:
-        return ref.paged_flashattn_ref(q, kl, vl, kr, vr, table, tier, lens)
+        return ref.paged_flashattn_ref(q, kl, vl, kr, vr, table, tier, lens,
+                                       scale=scale)
     return paged_splitk_flashattn(
-        q, kl, vl, kr, vr, table, tier, lens, window=window,
+        q, kl, vl, kr, vr, table, tier, lens, window=window, scale=scale,
         interpret=_interpret_default() if interpret is None else interpret)
 
 

@@ -20,10 +20,12 @@ def paged_flashattn_ref(
     table: jax.Array,        # [B, MP] int32 — index into the page's tier pool
     tier: jax.Array,         # [B, MP] int32 — 0 local, 1 remote
     lens: jax.Array,         # [B] int32 — valid tokens per slot
+    scale: float | None = None,
 ) -> jax.Array:
     """Paged tiered decode attention oracle: gather each slot's pages from
     its tier pools into a dense [B, MP*page, Kh, hd] view, then run
-    per-slot-masked softmax attention.  Slots with lens == 0 return zeros."""
+    per-slot-masked softmax attention.  Slots with lens == 0 return zeros.
+    ``scale`` overrides the default ``hd**-0.5`` softmax scale (MLA)."""
     ps = k_pages_local.shape[1]
     idx_l = jnp.clip(table, 0, k_pages_local.shape[0] - 1)
     idx_r = jnp.clip(table, 0, k_pages_remote.shape[0] - 1)
@@ -36,7 +38,8 @@ def paged_flashattn_ref(
     v = v.reshape(b, mp * ps, kh, hd).astype(jnp.float32)
     h = q.shape[1]
     g = h // kh
-    qg = q.reshape(b, g, kh, hd).astype(jnp.float32) * (hd ** -0.5)
+    sc = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(b, g, kh, hd).astype(jnp.float32) * sc
     logits = jnp.einsum("bgkh,bskh->bgks", qg, k)
     mask = jnp.arange(mp * ps)[None, None, None, :] < lens[:, None, None, None]
     logits = jnp.where(mask, logits, -1e30)

@@ -212,6 +212,7 @@ def _paged_kernel(
     ksem, vsem,
     *,
     window: int,
+    scale: float | None = None,
 ):
     b = order_ref[pl.program_id(0)]
     ps = kl_hbm.shape[1]
@@ -246,7 +247,8 @@ def _paged_kernel(
     l_ref[...] = jnp.zeros_like(l_ref)
     acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qg = q_ref[0].reshape(g, kh, hd).swapaxes(0, 1).astype(jnp.float32) * (hd ** -0.5)
+    sc = (hd ** -0.5) if scale is None else scale
+    qg = q_ref[0].reshape(g, kh, hd).swapaxes(0, 1).astype(jnp.float32) * sc
 
     def body(cc, _):
         slot = jax.lax.rem(cc, n_slots)
@@ -290,7 +292,7 @@ def host_first_slot_order(tier: jax.Array, lens: jax.Array, page_size: int) -> j
     return jnp.argsort(jnp.logical_not(has_remote), stable=True).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
 def paged_splitk_flashattn(
     q: jax.Array,              # [B, H, hd]
     k_pages_local: jax.Array,  # [P_loc(+sink), page, Kh, hd]
@@ -302,11 +304,14 @@ def paged_splitk_flashattn(
     lens: jax.Array,           # [B] int32
     *,
     window: int = DEFAULT_WINDOW,
+    scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Paged tiered flash-decode: each slot's KV is gathered page-by-page
     from whichever pool the page table names, under the congestion window.
-    Per-slot ``lens`` makes the batch ragged; lens == 0 slots output zeros."""
+    Per-slot ``lens`` makes the batch ragged; lens == 0 slots output zeros.
+    ``scale`` overrides the softmax scale (default ``hd**-0.5``) — MLA
+    attends latent-width pages with the paper model's ``(nd+rd)**-0.5``."""
     b, h, hd = q.shape
     ps, kh = k_pages_local.shape[1], k_pages_local.shape[2]
     mp = table.shape[1]
@@ -336,7 +341,7 @@ def paged_splitk_flashattn(
         ],
     )
     fn = pl.pallas_call(
-        functools.partial(_paged_kernel, window=window),
+        functools.partial(_paged_kernel, window=window, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
         compiler_params=compat.tpu_compiler_params(

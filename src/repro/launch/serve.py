@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2_7b --smoke \
       --requests 8 --offload-ratio 0.4
+
+Two planning modes (paper Fig. 8-10):
+
+* ``--offload-ratio R`` pins the global offload ratio directly (sweep mode);
+* ``--hbm-gb G`` derives the ratio from a real HBM budget —
+  ``OR = max(0, 1 - budget / footprint)`` — the paper's Fig. 10 mode.
 """
 from __future__ import annotations
 
@@ -25,7 +31,11 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--offload-ratio", type=float, default=0.4)
+    ap.add_argument("--offload-ratio", type=float, default=0.4,
+                    help="pinned global offload ratio (ignored with --hbm-gb)")
+    ap.add_argument("--hbm-gb", type=float, default=None,
+                    help="HBM budget in GB: plan the global ratio from the "
+                         "model footprint (paper Fig. 10 mode)")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--no-kernels", action="store_true")
     args = ap.parse_args(argv)
@@ -34,12 +44,16 @@ def main(argv: list[str] | None = None) -> dict:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-        global_offload_ratio=args.offload_ratio,
+        hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
+        global_offload_ratio=None if args.hbm_gb is not None else args.offload_ratio,
         use_kernels=not args.no_kernels, page_size=args.page_size)
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
           f"window={engine.plan.window.n_inflight} tiered={engine.tiered}")
+    if args.hbm_gb is not None:
+        print(f"budget: {args.hbm_gb:.1f} GB HBM vs "
+              f"{engine.plan.footprint_bytes / 1e9:.1f} GB footprint")
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -52,14 +66,17 @@ def main(argv: list[str] | None = None) -> dict:
     wall = time.time() - t0
     print(f"served {stats.served} requests in {wall:.2f}s | "
           f"decode steps {stats.decode_steps} | TPOT {stats.tpot*1e3:.1f} ms | "
+          f"TTFT p50 {stats.ttft_p50*1e3:.1f} ms p95 {stats.ttft_p95*1e3:.1f} ms | "
           f"prefill {stats.prefill_time:.2f}s")
-    if engine.tiered:
+    if engine.tiered and engine.plan.kv_pages is not None:
         pp = engine.plan.kv_pages
         print(f"kv pages: size={pp.page_size} local={pp.local_pages} "
               f"remote={pp.remote_pages} | peak local={stats.local_pages_hwm} "
               f"peak remote={stats.remote_pages_hwm} spills={stats.spills}")
     return {"served": stats.served, "tpot": stats.tpot, "wall": wall,
-            "spills": stats.spills}
+            "spills": stats.spills, "ttft_p50": stats.ttft_p50,
+            "ttft_p95": stats.ttft_p95,
+            "global_ratio": engine.plan.global_ratio}
 
 
 if __name__ == "__main__":

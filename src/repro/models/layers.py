@@ -15,8 +15,16 @@ import jax.numpy as jnp
 
 from repro.compat import get_abstract_mesh
 from repro.configs.base import ModelConfig
+from repro.core.tiering import TieredArray, matmul
 
 Params = dict[str, Any]
+
+# Tier-aware matmul (operand-type dispatch): plain weights hit `@`, weights
+# partitioned by `TieringPlan.partition` compute each tier from its own
+# buffer.  Layer functions take `mm` as a parameter so the serving layer can
+# inject the direct-access kernel (`kernels.ops.tiered_matmul`) while the
+# jit/scan reference path keeps the pure-jnp dispatch.
+Matmul = Any
 
 
 # --------------------------------------------------------------------------
@@ -107,7 +115,7 @@ def _softcap(logits: jax.Array, cap: float) -> jax.Array:
     return jnp.tanh(logits / cap) * cap if cap > 0 else logits
 
 
-def qkv_project(cfg: ModelConfig, x: jax.Array, p: Params):
+def qkv_project(cfg: ModelConfig, x: jax.Array, p: Params, mm: Matmul = matmul):
     """x: [B,T,d] -> q [B,T,Hp,hd], k,v [B,T,K,hd] (rope applied by caller).
 
     q uses the TP-padded head count (zero weights beyond n_heads — exact);
@@ -115,8 +123,8 @@ def qkv_project(cfg: ModelConfig, x: jax.Array, p: Params):
     projection stays replicated across the model axis (standard GQA-TP)."""
     hd = cfg.resolved_head_dim
     hp, kv = cfg.padded_heads, cfg.n_kv_heads
-    q = x @ p["wq"]
-    k_v = x @ p["wkv"]
+    q = mm(x, p["wq"])
+    k_v = mm(x, p["wkv"])
     if cfg.qkv_bias:
         q = q + p["bq"]
         k_v = k_v + p["bkv"]
@@ -208,7 +216,7 @@ def attention_block(
         q = apply_rope(q, cos, sin, rot)
         k = apply_rope(k, cos, sin, rot)
     out = attend(cfg, q, k, v, causal=causal)
-    return out.reshape(*x.shape[:2], cfg.padded_heads * hd) @ p["wo"]
+    return matmul(out.reshape(*x.shape[:2], cfg.padded_heads * hd), p["wo"])
 
 
 def attention_decode(
@@ -241,24 +249,24 @@ def attention_decode(
         k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
     out = attend(cfg, q, k_cache, v_cache, causal=False, kv_len=pos + 1)
-    y = out.reshape(*x.shape[:2], cfg.padded_heads * hd) @ p["wo"]
+    y = matmul(out.reshape(*x.shape[:2], cfg.padded_heads * hd), p["wo"])
     return y, k_cache, v_cache
 
 
 # --------------------------------------------------------------------------
 # MLPs
 # --------------------------------------------------------------------------
-def mlp_block(cfg: ModelConfig, x: jax.Array, p: Params) -> jax.Array:
+def mlp_block(cfg: ModelConfig, x: jax.Array, p: Params, mm: Matmul = matmul) -> jax.Array:
     if cfg.mlp == "swiglu":
-        gate_up = hint(x @ p["wi"], "batch", None, "model")
+        gate_up = hint(mm(x, p["wi"]), "batch", None, "model")
         gate, up = jnp.split(gate_up, 2, axis=-1)
         h = jax.nn.silu(gate) * up
     else:
-        h = hint(x @ p["wi"], "batch", None, "model")
+        h = hint(mm(x, p["wi"]), "batch", None, "model")
         if "bi" in p:
             h = h + p["bi"]
         h = jax.nn.gelu(h)
-    out = h @ p["wdown"]
+    out = mm(h, p["wdown"])
     if "bdown" in p:
         out = out + p["bdown"]
     return out
@@ -269,11 +277,27 @@ def mlp_block(cfg: ModelConfig, x: jax.Array, p: Params) -> jax.Array:
 # masks; the largest intermediate is the [E, C, d] expert buffer whose total
 # size is active_tokens × capacity_factor × d).
 # --------------------------------------------------------------------------
+def _expert_ffn(buf: jax.Array, wi: jax.Array, wdown: jax.Array) -> jax.Array:
+    """Per-expert SwiGLU FFN over a dispatch buffer [G,E,C,d] -> [G,E,C,d].
+
+    Each expert's computation is independent along E, so a tier split of the
+    expert stack (whole experts homed per tier — `models.registry`) computes
+    each tier's block with this same function and concatenates: numerically
+    identical to the unsplit einsum."""
+    gu = hint(jnp.einsum("gecd,edf->gecf", buf, wi),
+              None, "batch", None, "model")                       # [G,E,C,2ff]
+    gate_h, up_h = jnp.split(gu, 2, axis=-1)
+    he = jax.nn.silu(gate_h) * up_h
+    return hint(jnp.einsum("gecf,efd->gecd", he, wdown),
+                None, "batch", None, None)
+
+
 def moe_block(
     cfg: ModelConfig,
     x: jax.Array,
     p: Params,
     capacity_factor: float | None = None,
+    mm: Matmul = matmul,
 ) -> jax.Array:
     """x: [B,T,d].  Grouped sort+scatter MoE dispatch.
 
@@ -333,12 +357,21 @@ def moe_block(
     # all-to-all — perf iterations B3/B5.)
     buf = hint(buf, None, "batch", None, None)
 
-    gu = hint(jnp.einsum("gecd,edf->gecf", buf, p["experts_wi"]),
-              None, "batch", None, "model")                       # [G,E,C,2ff]
-    gate_h, up_h = jnp.split(gu, 2, axis=-1)
-    he = jax.nn.silu(gate_h) * up_h
-    ye = hint(jnp.einsum("gecf,efd->gecd", he, p["experts_wdown"]),
-              None, "batch", None, None)
+    wi, wdown = p["experts_wi"], p["experts_wdown"]
+    if isinstance(wi, TieredArray):
+        # Tiered expert stack: whole experts homed per tier (registry axis
+        # -3).  Both stacks split by the same op ratio, so the boundaries
+        # coincide; each tier's block computes from its own buffer (the
+        # host block streams over the host link on a real runtime).
+        assert isinstance(wdown, TieredArray), "experts_wi/wdown tier mismatch"
+        e_loc = wi.local.shape[-3]
+        assert wdown.local.shape[-3] == e_loc, "experts_wi/wdown tier mismatch"
+        ye = jnp.concatenate([
+            _expert_ffn(buf[:, :e_loc], wi.local, wdown.local),
+            _expert_ffn(buf[:, e_loc:], wi.remote, wdown.remote),
+        ], axis=1)
+    else:
+        ye = _expert_ffn(buf, wi, wdown)
     # EP combine: back to group-sharded for the local unsort-gather
     ye = hint(ye, "batch", None, None, None)
 
@@ -354,31 +387,32 @@ def moe_block(
 
     if cfg.n_shared_experts:
         xf = x.reshape(g, n, d)
-        gu_s = xf @ p["shared_wi"]
+        gu_s = mm(xf, p["shared_wi"])
         g_s, u_s = jnp.split(gu_s, 2, axis=-1)
-        y = y + (jax.nn.silu(g_s) * u_s) @ p["shared_wdown"]
+        y = y + mm(jax.nn.silu(g_s) * u_s, p["shared_wdown"])
     return y.reshape(b, t, d)
 
 
 # --------------------------------------------------------------------------
 # DeepSeek-V2 MLA — latent-compressed KV; absorbed matmuls at decode
 # --------------------------------------------------------------------------
-def mla_project_q(cfg: ModelConfig, x: jax.Array, p: Params):
+def mla_project_q(cfg: ModelConfig, x: jax.Array, p: Params, mm: Matmul = matmul):
     """-> q_nope [B,T,H,nd], q_rope [B,T,H,rd]."""
     b, t, _ = x.shape
     h, nd, rd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
     if cfg.q_lora_rank:
-        q_lat = rmsnorm(x @ p["wq_a"], p["q_a_norm_w"], cfg.norm_eps)
-        q = q_lat @ p["wq_b"]
+        q_lat = rmsnorm(mm(x, p["wq_a"]), p["q_a_norm_w"], cfg.norm_eps)
+        q = mm(q_lat, p["wq_b"])
     else:
-        q = x @ p["wq_b"]
+        q = mm(x, p["wq_b"])
     q = hint(q.reshape(b, t, h, nd + rd), "batch", None, "model", None)
     return q[..., :nd], q[..., nd:]
 
 
-def mla_project_kv_latent(cfg: ModelConfig, x: jax.Array, p: Params):
+def mla_project_kv_latent(cfg: ModelConfig, x: jax.Array, p: Params,
+                          mm: Matmul = matmul):
     """-> c_kv [B,T,rank] (normed latent), k_rope [B,T,rd] (shared per head)."""
-    lat = x @ p["wkv_a"]
+    lat = mm(x, p["wkv_a"])
     c_kv, k_rope = jnp.split(lat, [cfg.kv_lora_rank], axis=-1)
     return rmsnorm(c_kv, p["kv_a_norm_w"], cfg.norm_eps), k_rope
 
@@ -401,7 +435,7 @@ def mla_attention_block(
     k_full = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope, (b, t, h, rd))], axis=-1)
     out = attend(cfg, q_full, k_full, v, causal=causal)           # scale=(nd+rd)^-.5
-    return out.reshape(b, t, h * vd) @ p["wo"]
+    return matmul(out.reshape(b, t, h * vd), p["wo"])
 
 
 def mla_decode(
@@ -445,4 +479,4 @@ def mla_decode(
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache)          # [B,H,rank]
     out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(b, 1, h * vd)
-    return out @ p["wo"], ckv_cache, krope_cache
+    return matmul(out, p["wo"]), ckv_cache, krope_cache

@@ -218,11 +218,12 @@ def embed_inputs(cfg: ModelConfig, params: Params, batch: dict[str, jax.Array]) 
     return tok
 
 
-def lm_head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+def lm_head(cfg: ModelConfig, params: Params, x: jax.Array,
+            mm: L.Matmul = L.matmul) -> jax.Array:
     x = (L.layernorm(x, params["final_w"], params["final_b"], cfg.norm_eps)
          if cfg.norm == "layernorm" else L.rmsnorm(x, params["final_w"], cfg.norm_eps))
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return L.hint(x @ w, "batch", None, "model")
+    return L.hint(mm(x, w), "batch", None, "model")
 
 
 # ==========================================================================
@@ -331,7 +332,8 @@ def prefill(cfg: ModelConfig, params: Params, batch: dict[str, jax.Array],
             hn = L.norm(cfg, h, lp, "ln1")
             y, final = S.ssm_block(cfg, hn, lp)
             # conv cache: last W-1 pre-conv inputs (x | B | C)
-            xbc = jnp.concatenate([hn @ lp["x_proj"], hn @ lp["bc_proj"]], axis=-1)
+            xbc = jnp.concatenate(
+                [L.matmul(hn, lp["x_proj"]), L.matmul(hn, lp["bc_proj"])], axis=-1)
             conv = xbc[:, -(cfg.ssm_conv_width - 1):]
             return h + y, {"conv": conv, "state": final}
         x, cache = jax.lax.scan(layer, x, params["layers"])
@@ -363,7 +365,7 @@ def prefill(cfg: ModelConfig, params: Params, batch: dict[str, jax.Array],
             q = L.apply_rope(q, cos, sin, rot)
             k = L.apply_rope(k, cos, sin, rot)
         attn = L.attend(cfg, q, k, v, causal=True)
-        h = h + attn.reshape(bsz, t, -1) @ lp["wo"]
+        h = h + L.matmul(attn.reshape(bsz, t, -1), lp["wo"])
         ffn_in = L.norm(cfg, h, lp, "ln2")
         ffn = L.moe_block(cfg, ffn_in, lp) if cfg.family == "moe" else L.mlp_block(cfg, ffn_in, lp)
         h = h + ffn
@@ -397,14 +399,16 @@ def _hybrid_prefill(cfg: ModelConfig, params: Params, x, positions, pad):
             cos, sin = L.rope_cos_sin(positions, rot, cfg.rope_theta)
             q = L.apply_rope(q, cos, sin, rot)
             kk = L.apply_rope(kk, cos, sin, rot)
-        z = z + L.attend(cfg, q, kk, vv, causal=True).reshape(bsz, t, -1) @ sp["wo"]
+        z = z + L.matmul(L.attend(cfg, q, kk, vv, causal=True).reshape(bsz, t, -1),
+                         sp["wo"])
         z = z + L.mlp_block(cfg, L.norm(cfg, z, sp, "ln2"), sp)
         h = h + z
 
         def inner(hh, lp):
             hn = L.norm(cfg, hh, lp, "ln1")
             y, final = S.ssm_block(cfg, hn, lp)
-            xbc = jnp.concatenate([hn @ lp["x_proj"], hn @ lp["bc_proj"]], axis=-1)
+            xbc = jnp.concatenate(
+                [L.matmul(hn, lp["x_proj"]), L.matmul(hn, lp["bc_proj"])], axis=-1)
             return hh + y, {"conv": xbc[:, -(cfg.ssm_conv_width - 1):], "state": final}
 
         h, inner_cache = jax.lax.scan(inner, h, gp)

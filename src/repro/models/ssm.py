@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.tiering import matmul
 from repro.models.layers import rmsnorm
 
 CHUNK = 256
@@ -118,14 +119,15 @@ def ssd_decode_step(
 # --------------------------------------------------------------------------
 # Full Mamba-2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
 # --------------------------------------------------------------------------
-def _project_in(cfg: ModelConfig, x: jax.Array, p: dict):
+def _project_in(cfg: ModelConfig, x: jax.Array, p: dict, mm=matmul):
     """Separate z/x/BC/dt projections (split matrices so the model-axis
-    sharding boundaries align — perf-loop iteration A2)."""
+    sharding boundaries align — perf-loop iteration A2).  `mm` is the
+    tier-aware matmul (operand dispatch for offloaded projections)."""
     from repro.models.layers import hint
-    z = hint(x @ p["z_proj"], "batch", None, "model")
-    xs = hint(x @ p["x_proj"], "batch", None, "model")
-    bc = x @ p["bc_proj"]                      # [.., 2·G·S] small, replicated
-    dt = x @ p["dt_proj"]                      # [.., nH]    small, replicated
+    z = hint(mm(x, p["z_proj"]), "batch", None, "model")
+    xs = hint(mm(x, p["x_proj"]), "batch", None, "model")
+    bc = mm(x, p["bc_proj"])                   # [.., 2·G·S] small, replicated
+    dt = mm(x, p["dt_proj"])                   # [.., nH]    small, replicated
     return z, xs, bc, dt
 
 
@@ -145,13 +147,13 @@ def _conv_split(cfg: ModelConfig, xs: jax.Array, bc: jax.Array, p: dict):
     return x_out, bc_out
 
 
-def ssm_block(cfg: ModelConfig, x: jax.Array, p: dict, h0=None):
+def ssm_block(cfg: ModelConfig, x: jax.Array, p: dict, h0=None, mm=matmul):
     """Full-sequence Mamba-2 block. x: [B,T,d] -> (y [B,T,d], final_state)."""
     bsz, t, _ = x.shape
     d_inner = cfg.ssm_expand * cfg.d_model
     nh = d_inner // cfg.ssm_head_dim
     g, s = cfg.ssm_n_groups, cfg.ssm_state
-    z, xs, bc, dt = _project_in(cfg, x, p)
+    z, xs, bc, dt = _project_in(cfg, x, p, mm)
     x_conv, bc_conv = _conv_split(cfg, xs, bc, p)
     b_mat, c_mat = jnp.split(bc_conv, 2, axis=-1)
     x_ssm = x_conv.reshape(bsz, t, nh, cfg.ssm_head_dim)
@@ -164,10 +166,11 @@ def ssm_block(cfg: ModelConfig, x: jax.Array, p: dict, h0=None):
     y = y + x_ssm * p["D"][None, None, :, None]
     y = y.reshape(bsz, t, d_inner)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm_w"], cfg.norm_eps)
-    return y @ p["ssm_out"], final
+    return mm(y, p["ssm_out"]), final
 
 
-def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state):
+def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state,
+                     mm=matmul):
     """Single-token Mamba-2 step.
 
     x: [B,1,d]; conv_cache: [B,W-1,conv_dim] (trailing inputs);
@@ -177,7 +180,7 @@ def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state)
     d_inner = cfg.ssm_expand * cfg.d_model
     nh = d_inner // cfg.ssm_head_dim
     g, s = cfg.ssm_n_groups, cfg.ssm_state
-    z, xs, bc, dt = _project_in(cfg, x[:, :1], p)
+    z, xs, bc, dt = _project_in(cfg, x[:, :1], p, mm)
     z, xs, bc, dt = z[:, 0], xs[:, 0], bc[:, 0], dt[:, 0]
     xbc_new = jnp.concatenate([xs, bc], axis=-1)
     window = jnp.concatenate([conv_cache, xbc_new[:, None]], axis=1)  # [B,W,C]
@@ -193,4 +196,4 @@ def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state)
     y = y + x_ssm * p["D"][None, :, None]
     y = y.reshape(bsz, d_inner)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm_w"], cfg.norm_eps)
-    return (y @ p["ssm_out"])[:, None], conv_cache, state
+    return mm(y, p["ssm_out"])[:, None], conv_cache, state

@@ -5,19 +5,29 @@ requests are admitted into any free slot (no alignment requirement — every
 slot tracks its own KV length), decode steps take the per-slot ``lens``
 vector, and finished requests free their slot for the next queued request.
 
-Offloading is planned once at startup (OffloadEngine): weights are
-column-split per the per-op ratios, and the KV cache is a paged tiered
-cache (`serving.paged_cache.PagedTieredCache`) — fixed-size pages per slot,
-each page resident in HBM or host DRAM, with the planner's ``kv_ratio``
-realized as a page budget (`core.engine.kv_page_plan`).  Decode runs the
-direct-access kernels (`serving.tiered_decode.paged_tiered_decode_step`)
-for dense archs, or the reference pjit path (which also supports ragged
-per-slot positions) otherwise.
+Offloading is planned once at startup (OffloadEngine) and realized through
+the unified tiering API: ``TieringPlan.partition`` wraps every registered
+operand (`models.registry`) in a `TieredArray` — dense/VLM linears, MoE
+expert stacks, MLA latent projections, SSM projections — and dispatch is by
+operand type, for every decoder family:
+
+* prefill runs `models.prefill` directly over the tiered params (pure-jnp
+  operand dispatch) — remote partitions are never concatenated back into
+  HBM;
+* decode runs the direct-access kernels (`serving.tiered_decode`): the
+  tiered GEMM for weights plus the paged tiered KV cache
+  (`serving.paged_cache.PagedTieredCache`) for the attention families
+  (GQA pages, or MLA latent pages attended in absorbed form), the
+  recurrent tiered step for SSM, and the grouped step for hybrids.
+
+The reference pjit path (`models.decode_step`) accepts the same tiered
+params and serves as the no-kernel fallback.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any
 
@@ -32,6 +42,10 @@ from repro.core.hardware import HardwareSpec, TPU_V5E
 from repro.models import model as M
 from repro.serving import tiered_decode as TD
 from repro.serving.paged_cache import PagedTieredCache
+
+# Families served through the direct-access kernel path ("encoder" has no
+# decode step; everything else goes tiered).
+TIERED_FAMILIES = ("dense", "vlm", "moe", "ssm", "hybrid")
 
 
 @dataclasses.dataclass
@@ -55,10 +69,23 @@ class EngineStats:
     local_pages_hwm: int = 0               # peak pages resident per tier
     remote_pages_hwm: int = 0
     spills: int = 0                        # local->remote page migrations
+    ttfts: list[float] = dataclasses.field(default_factory=list)
+    # per-request time-to-first-token (t_first - t_submit), appended at admit
 
     @property
     def tpot(self) -> float:
         return self.decode_time / max(1, self.decode_steps)
+
+    def _ttft_pct(self, q: float) -> float:
+        return float(np.percentile(self.ttfts, q)) if self.ttfts else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._ttft_pct(50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._ttft_pct(95)
 
 
 class ServingEngine:
@@ -79,41 +106,59 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.page_size = page_size
-        self.use_kernels = use_kernels and cfg.family in ("dense", "vlm")
+        self.use_kernels = use_kernels and cfg.family in TIERED_FAMILIES
         wl = WorkloadSpec(batch=max_batch, seq_len=max_len, phase="decode")
         self.plan = offload_engine.plan(
             cfg, wl, hw, hbm_budget_bytes=hbm_budget_bytes,
             global_ratio=global_offload_ratio, kv_page_size=page_size)
         self.window = self.plan.window.n_inflight
-        if self.use_kernels and self.plan.global_ratio > 0:
-            self.params = TD.partition_dense_params(
-                params, self.plan.param_ratios,
-                align=32 if cfg.d_model < 1024 else 128)
-            self.tiered = True
+        # One partition pass for every family (the unified API); at ratio 0
+        # no leaf is wrapped and the kernel path runs over plain weights.
+        self.tiered = self.use_kernels
+        if self.tiered:
+            self.params = self.plan.partition(
+                params, align=32 if cfg.d_model < 1024 else 128)
         else:
             self.params = params
-            self.tiered = False
 
         dtype = next(iter(jax.tree.leaves(params))).dtype
-        if self.tiered:
-            pp = self.plan.kv_pages
-            self.pcache = PagedTieredCache(
-                cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim,
-                page_size=page_size,
-                local_pages=pp.local_pages,
-                remote_pages=pp.remote_pages,
-                max_slots=max_batch,
-                max_pages_per_slot=-(-max_len // page_size),
-                dtype=dtype)
-            self.cache = None
+        self.pcache: PagedTieredCache | None = None
+        self.cache: dict[str, jax.Array] | None = None
+        if self.tiered and cfg.family in ("dense", "vlm", "moe"):
+            self.pcache = self._make_pcache(cfg.n_layers, dtype)
+        elif self.tiered and cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            self.pcache = self._make_pcache(
+                cfg.n_layers // cfg.hybrid_attn_every, dtype)
+            full = M.init_cache(cfg, max_batch, max_len, dtype)
+            self.cache = {"conv": full["conv"], "state": full["state"]}
         else:
-            self.pcache = None
+            # SSM (no KV cache) or the reference fallback path.
             self.cache = M.init_cache(cfg, max_batch, max_len, dtype)
         self.lens = np.zeros(max_batch, dtype=np.int32)     # per-slot kv length
         self.active: list[Request | None] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self._next_tok = np.zeros((max_batch, 1), dtype=np.int32)
+
+    def _make_pcache(self, n_kv_layers: int, dtype) -> PagedTieredCache:
+        cfg = self.cfg
+        if cfg.use_mla:
+            # MLA pages carry the latent [ckv | k_rope] as one kv head,
+            # stored once (K-only; the V read aliases the K pool) — pool
+            # bytes match the planner's per-token KV accounting.
+            kv_heads, head_dim = 1, cfg.kv_lora_rank + cfg.rope_head_dim
+        else:
+            kv_heads, head_dim = cfg.n_kv_heads, cfg.resolved_head_dim
+        pp = self.plan.kv_pages
+        return PagedTieredCache(
+            n_kv_layers, kv_heads, head_dim,
+            page_size=self.page_size,
+            local_pages=pp.local_pages,
+            remote_pages=pp.remote_pages,
+            max_slots=self.max_batch,
+            max_pages_per_slot=-(-self.max_len // self.page_size),
+            dtype=dtype,
+            store_v=not cfg.use_mla)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -125,53 +170,68 @@ class ServingEngine:
 
     def _admit(self) -> None:
         """Prefill queued requests into free slots (one at a time — prompt
-        lengths vary; production would bucket them)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                return
+        lengths vary; production would bucket them).
+
+        Prefill runs directly over the tiered params (operand dispatch in
+        `models.layers`): remote weight partitions are streamed, never
+        concatenated back into HBM.  A request whose prefill-produced first
+        token is EOS (or whose budget is a single token) finishes here
+        without occupying a slot or burning decode steps."""
+        free = self._free_slots()
+        fi = 0
+        while fi < len(free) and self.queue:
+            slot = free[fi]
             req = self.queue.popleft()
             t0 = time.time()
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = M.prefill(self.cfg, self.params_for_prefill(),
+            logits, cache1 = M.prefill(self.cfg, self.params,
                                        {"tokens": tokens}, max_len=self.max_len)
-            self._write_slot_cache(slot, cache1, len(req.prompt))
-            self.lens[slot] = len(req.prompt)
             nxt = int(jnp.argmax(logits[0, -1]))
-            self._next_tok[slot, 0] = nxt
             req.out_tokens.append(nxt)
             req.t_first = time.time()
+            self.stats.prefill_time += req.t_first - t0
+            self.stats.ttfts.append(req.t_first - req.t_submit)
+            if nxt == req.eos_id or req.max_new_tokens <= 1:
+                req.t_done = req.t_first
+                self.stats.served += 1
+                continue                       # slot stays free for the next
+            self._write_slot_cache(slot, cache1, len(req.prompt))
+            self.lens[slot] = len(req.prompt)
+            self._next_tok[slot, 0] = nxt
             self.active[slot] = req
-            self.stats.prefill_time += time.time() - t0
             self._note_occupancy()
+            fi += 1
 
     def params_for_prefill(self) -> dict[str, Any]:
-        """Prefill uses materialized weights (prefill is compute-bound; the
-        planner assigns it ratio via its own ops — here we serve prefill from
-        the local tier for simplicity)."""
-        if not self.tiered:
-            return self.params
-        mat = dict(self.params)
-        mat["layers"] = {}
-        per_layer = self.params["layers"]
-        keys = per_layer[0].keys()
-        for k in keys:
-            vals = [lp[k].materialize() if hasattr(lp[k], "materialize") else lp[k]
-                    for lp in per_layer]
-            mat["layers"][k] = jnp.stack(vals)
-        if hasattr(mat.get("lm_head"), "materialize"):
-            mat["lm_head"] = mat["lm_head"].materialize()
-        return mat
+        """Deprecated shim: prefill no longer materializes the tiers —
+        `models.prefill` consumes the tiered params directly."""
+        warnings.warn(
+            "params_for_prefill is deprecated: prefill runs over the tiered "
+            "params via operand dispatch; no materialization happens",
+            DeprecationWarning, stacklevel=2)
+        return self.params
 
     def _write_slot_cache(self, slot: int, cache1: dict[str, jax.Array],
                           prompt_len: int) -> None:
-        if not self.tiered:
+        if self.pcache is None:
+            # Reference dense cache, or SSM conv/state (both [L, B, ...]).
             for k in self.cache:
                 self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
             return
+        if self.cfg.family == "hybrid":
+            for k in self.cache:               # conv/state recurrent state
+                self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
+            self.pcache.write_prompt(
+                slot, cache1["k"][:, 0, :prompt_len], cache1["v"][:, 0, :prompt_len])
+            return
+        if self.cfg.use_mla:
+            ckv = cache1["ckv"][:, 0, :prompt_len]       # [L, T, rank]
+            krope = cache1["krope"][:, 0, :prompt_len]   # [L, T, rd]
+            k = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+            self.pcache.write_prompt(slot, k)            # K-only latent pages
+            return
         self.pcache.write_prompt(
-            slot,
-            cache1["k"][:, 0, :prompt_len],
-            cache1["v"][:, 0, :prompt_len])
+            slot, cache1["k"][:, 0, :prompt_len], cache1["v"][:, 0, :prompt_len])
 
     def _note_occupancy(self) -> None:
         if self.pcache is None:
@@ -193,24 +253,37 @@ class ServingEngine:
         tokens = jnp.asarray(self._next_tok)
         positions = np.where(active, self.lens, 0).astype(np.int32)
         t0 = time.time()
-        if self.tiered:
+        if not self.tiered:
+            logits, self.cache = M.decode_step(
+                self.cfg, self.params, self.cache, tokens,
+                jnp.asarray(positions))
+        elif self.pcache is None:
+            # Pure-SSM decoder: recurrent tiered step, no KV pages.
+            logits, self.cache = TD.tiered_ssm_decode_step(
+                self.cfg, self.params, self.cache, tokens,
+                window=self.window, use_kernel=True)
+        else:
             for slot in np.nonzero(active)[0]:
                 self.pcache.ensure_capacity(int(slot), int(self.lens[slot]) + 1)
             self._note_occupancy()
             wr_tier, wr_idx, wr_off = self.pcache.write_targets(self.lens, active)
             table, tier = self.pcache.device_tables()
             attn_lens = np.where(active, self.lens + 1, 0).astype(np.int32)
-            logits, self.pcache.pools = TD.paged_tiered_decode_step(
-                self.cfg, self.params, self.pcache.pools, tokens,
-                jnp.asarray(positions), jnp.asarray(attn_lens),
-                table, tier, wr_tier, wr_idx, wr_off,
-                sink_local=self.pcache.sink_local,
-                sink_remote=self.pcache.sink_remote,
-                window=self.window, use_kernel=True)
-        else:
-            logits, self.cache = M.decode_step(
-                self.cfg, self.params, self.cache, tokens,
-                jnp.asarray(positions))
+            paged_args = (tokens, jnp.asarray(positions), jnp.asarray(attn_lens),
+                          table, tier, wr_tier, wr_idx, wr_off)
+            if self.cfg.family == "hybrid":
+                logits, self.cache, self.pcache.pools = TD.tiered_hybrid_decode_step(
+                    self.cfg, self.params, self.cache, self.pcache.pools,
+                    *paged_args,
+                    sink_local=self.pcache.sink_local,
+                    sink_remote=self.pcache.sink_remote,
+                    window=self.window, use_kernel=True)
+            else:
+                logits, self.pcache.pools = TD.paged_tiered_decode_step(
+                    self.cfg, self.params, self.pcache.pools, *paged_args,
+                    sink_local=self.pcache.sink_local,
+                    sink_remote=self.pcache.sink_remote,
+                    window=self.window, use_kernel=True)
         logits.block_until_ready()
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1

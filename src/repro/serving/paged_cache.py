@@ -58,7 +58,13 @@ class PagedTieredCache:
         max_slots: int,
         max_pages_per_slot: int,
         dtype=jnp.float32,
+        store_v: bool = True,
     ):
+        """``store_v=False`` allocates K pages only (MLA: the latent
+        ``[ckv | k_rope]`` row serves as both K and V — the attention
+        output is sliced back to the latent rank, so the V read aliases
+        the K pool and the cache stores each latent exactly once, matching
+        the planner's per-token KV accounting)."""
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         if local_pages + remote_pages < max_pages_per_slot:
@@ -70,12 +76,13 @@ class PagedTieredCache:
         self.n_remote = remote_pages
         self.max_slots = max_slots
         self.max_pages = max_pages_per_slot
+        self.kv_names: tuple[str, ...] = ("k", "v") if store_v else ("k",)
         # +1 sink page at index n_{local,remote} (never allocated, never read)
         self.pools: dict[str, jax.Array] = {
-            "k_local": jnp.zeros((n_layers, local_pages + 1, page_size, kv_heads, head_dim), dtype),
-            "v_local": jnp.zeros((n_layers, local_pages + 1, page_size, kv_heads, head_dim), dtype),
-            "k_remote": jnp.zeros((n_layers, remote_pages + 1, page_size, kv_heads, head_dim), dtype),
-            "v_remote": jnp.zeros((n_layers, remote_pages + 1, page_size, kv_heads, head_dim), dtype),
+            f"{name}_{suffix}": jnp.zeros(
+                (n_layers, pages + 1, page_size, kv_heads, head_dim), dtype)
+            for name in self.kv_names
+            for suffix, pages in (("local", local_pages), ("remote", remote_pages))
         }
         self.free: dict[int, list[int]] = {
             LOCAL: list(range(local_pages)),
@@ -116,7 +123,7 @@ class PagedTieredCache:
             raise CacheFull("both tiers exhausted")
         victim = min(self._stamp, key=self._stamp.get)
         dst = self.free[REMOTE].pop()
-        for name in ("k", "v"):
+        for name in self.kv_names:
             pool_l, pool_r = self.pools[f"{name}_local"], self.pools[f"{name}_remote"]
             self.pools[f"{name}_remote"] = pool_r.at[:, dst].set(pool_l[:, victim])
         slot, p = self._owner.pop(victim)
@@ -171,43 +178,46 @@ class PagedTieredCache:
         self.n_pages[slot] = 0
 
     # -- data movement -----------------------------------------------------
-    def write_prompt(self, slot: int, k: jax.Array, v: jax.Array) -> None:
+    def write_prompt(self, slot: int, k: jax.Array,
+                     v: jax.Array | None = None) -> None:
         """Write a prefilled KV block (k, v: [L, T, Kh, hd]) into `slot`'s
         pages, allocating as needed.  One batched scatter per (tier, K/V)
         rather than per page — each functional `.at[].set` copies the whole
-        pool, so per-page updates would cost O(n_pages x pool bytes)."""
+        pool, so per-page updates would cost O(n_pages x pool bytes).
+        K-only caches (``store_v=False``) take just `k`."""
         t = k.shape[1]
         self.ensure_capacity(slot, t)
         ps = self.page_size
         n_pages = -(-t // ps)
         pad = n_pages * ps - t
-        if pad:  # zero-fill the final partial page's tail (masked by lens)
-            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        nl = k.shape[0]
-        kp = k.reshape(nl, n_pages, ps, *k.shape[2:])
-        vp = v.reshape(nl, n_pages, ps, *v.shape[2:])
+        sources = {"k": k} if len(self.kv_names) == 1 else {"k": k, "v": v}
+        for name, src in sources.items():
+            if pad:  # zero-fill the final partial page's tail (masked by lens)
+                src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            sources[name] = src.reshape(src.shape[0], n_pages, ps, *src.shape[2:])
         for tier, suffix in ((LOCAL, "local"), (REMOTE, "remote")):
             sel = [p for p in range(n_pages) if self.tier[slot, p] == tier]
             if not sel:
                 continue
             idx = self.table[slot, sel]
-            for name, src in (("k", kp), ("v", vp)):
+            for name, src in sources.items():
                 pool = self.pools[f"{name}_{suffix}"]
                 self.pools[f"{name}_{suffix}"] = \
                     pool.at[:, idx].set(src[:, sel].astype(pool.dtype))
 
     def gather(self, slot: int, length: int) -> tuple[jax.Array, jax.Array]:
         """Reconstruct the dense [L, length, Kh, hd] K and V for `slot`
-        (testing / debugging; the decode path gathers inside the kernel)."""
+        (testing / debugging; the decode path gathers inside the kernel).
+        K-only caches return the K pages for both (V aliases K)."""
         ps = self.page_size
+        v_name = "v" if "v_local" in self.pools else "k"
         ks, vs = [], []
         for p in range(-(-length // ps)):
             idx, tier = int(self.table[slot, p]), int(self.tier[slot, p])
             suffix = "local" if tier == LOCAL else "remote"
             n = min(ps, length - p * ps)
             ks.append(self.pools[f"k_{suffix}"][:, idx, :n])
-            vs.append(self.pools[f"v_{suffix}"][:, idx, :n])
+            vs.append(self.pools[f"{v_name}_{suffix}"][:, idx, :n])
         if not ks:
             l_, _, _, kh, hd = self.pools["k_local"].shape
             z = jnp.zeros((l_, 0, kh, hd), self.pools["k_local"].dtype)

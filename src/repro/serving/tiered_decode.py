@@ -1,28 +1,41 @@
-"""Tiered decode path: the paper's system end-to-end on a dense LM.
+"""Tiered decode path: the paper's system end-to-end, for every family.
 
-This is the serving-side integration of DAK: every large linear operand is
-a `TieredArray` (column-split per the planner's per-op ratios) computed by
-`SplitK_GEMM`, and the KV cache is attended by `SplitK_FlashAttn` — both
-with the congestion window from the plan.  Two cache layouts are supported:
+This is the serving-side realization of the unified tiering API: params come
+from ``TieringPlan.partition`` (stacked leaves, tierable operands wrapped in
+`TieredArray` per the operand registry — `models.registry`), and dispatch is
+by *operand type*, not by model family: every 2-D tiered weight is computed
+by `SplitK_GEMM` (`kernels.ops.tiered_matmul`), tiered MoE expert stacks run
+the per-tier expert einsum (`models.layers.moe_block`), and the KV cache is
+attended by the page-table-indexed `SplitK_FlashAttn` variant — all under
+the congestion window from the plan.
 
-* ``tiered_decode_step`` — the paper's original batch-split layout
-  (`split_cache_batch`): a slot-aligned batch whose prefix lives in HBM and
-  whose suffix lives on the host, all slots sharing one position.
-* ``paged_tiered_decode_step`` — the paged layout
-  (`serving.paged_cache.PagedTieredCache`): per-slot page tables whose
-  pages are individually tagged local/remote, per-slot lengths (ragged
-  continuous batching), attention via the page-table-indexed gather kernel
-  (`kernels.splitk_flashattn.paged_splitk_flashattn`).
+Family coverage:
 
-Both run real kernels (interpret mode on CPU) and are exercised by
+* ``paged_tiered_decode_step`` — dense / VLM / MoE / MLA decoders: GQA or
+  MLA attention over the paged tiered KV cache
+  (`serving.paged_cache.PagedTieredCache`), dense-MLP or MoE FFN.  MLA
+  caches the latent ``[ckv | k_rope]`` as single-head pages and attends in
+  absorbed form (scores and outputs in latent space) with the model's
+  ``(nd+rd)**-0.5`` scale.
+* ``tiered_ssm_decode_step`` — pure-SSM decoders (no KV cache): recurrent
+  Mamba-2 steps whose projections run through the tiered GEMM.
+* ``tiered_hybrid_decode_step`` — Zamba2-style hybrids: shared attention
+  blocks over a paged tiered cache (one attention layer per group) plus
+  tiered SSM layers.
+
+All steps run real kernels (interpret mode on CPU) and are exercised by
 examples/serve_offload.py and the serving tests; the pjit path
-(models.decode_step) remains the large-scale route.
+(`models.decode_step`) accepts the same tiered params (pure-jnp operand
+dispatch) and remains the large-scale route.
 
-Supports the dense/vlm families (the paper evaluates OPT/Llama-class
-models); MoE/SSM serving uses the reference path.
+Deprecated entry points (one release): ``partition_dense_params`` (use
+``TieringPlan.partition``), ``split_cache_batch`` + ``tiered_decode_step``
+(the paper's §5 slot-aligned batch-split layout, retained for the kernel
+experiments).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -32,39 +45,40 @@ from repro.configs.base import ModelConfig
 from repro.core.tiering import TieredArray, partition
 from repro.kernels import ops
 from repro.models import layers as L
+from repro.models import model as M
+from repro.models import ssm as S
 
+# Deprecated: the operand registry (models.registry) is the source of truth.
 TIERABLE = ("wq", "wkv", "wo", "wi", "wdown", "lm_head")
 
 
 def partition_dense_params(
     params: dict[str, Any], ratios: dict[str, float], align: int = 128
 ) -> dict[str, Any]:
-    """Split per-layer weight stacks into per-layer lists of TieredArrays.
+    """Deprecated shim — use ``TieringPlan.partition`` (core.engine).
 
-    Stacked [L, d_in, d_out] weights become per-layer TieredArrays (the
-    kernel operates per layer; python-loop decode is the serving path)."""
+    Partitions the dense-family weight stacks by per-leaf ratios.  Ratio
+    keys may be registry paths (``"layers/wq"``) or bare leaf names
+    (``"wq"``).  Unlike the pre-registry version, each operand resolves its
+    *own* ratio — ``wkv`` no longer silently reuses the ``wq`` entry.
+    Returns the unified stacked format (leaves wrapped in `TieredArray`),
+    consumable by every decode step in this module and by `models`.
+    """
+    warnings.warn(
+        "partition_dense_params is deprecated; use TieringPlan.partition "
+        "(the operand-registry path) instead", DeprecationWarning, stacklevel=2)
     out: dict[str, Any] = dict(params)
-    layers = params["layers"]
-    n_layers = next(iter(layers.values())).shape[0]
-    new_layers: list[dict[str, Any]] = []
-    ratio_of = {
-        "wq": ratios.get("wq", 0.0), "wkv": ratios.get("wq", 0.0),
-        "wo": ratios.get("wo", 0.0), "wi": ratios.get("wi", 0.0),
-        "wdown": ratios.get("wdown", 0.0),
-    }
-    for i in range(n_layers):
-        lp: dict[str, Any] = {}
-        for k, v in layers.items():
-            leaf = v[i]
-            if k in ratio_of and leaf.ndim == 2 and ratio_of[k] > 0:
-                lp[k] = partition(leaf, ratio_of[k], axis=1, align=align)
-            else:
-                lp[k] = leaf
-        new_layers.append(lp)
+    new_layers: dict[str, Any] = dict(params["layers"])
+    for key in ("wq", "wkv", "wo", "wi", "wdown"):
+        leaf = new_layers.get(key)
+        r = ratios.get(f"layers/{key}", ratios.get(key, 0.0))
+        if leaf is None or leaf.ndim != 3 or r <= 0.0:
+            continue
+        new_layers[key] = partition(leaf, r, axis=-1, align=align)
     out["layers"] = new_layers
-    if "lm_head" in params and ratios.get("lm_head", 0.0) > 0:
-        out["lm_head"] = partition(params["lm_head"], ratios["lm_head"], axis=1,
-                                   align=align)
+    r = ratios.get("lm_head", 0.0)
+    if "lm_head" in params and r > 0.0:
+        out["lm_head"] = partition(params["lm_head"], r, axis=-1, align=align)
     return out
 
 
@@ -74,10 +88,22 @@ def _mm(x: jax.Array, w: Any, window: int, use_kernel: bool) -> jax.Array:
     return x @ w
 
 
+def layer_slice(layers: Any, i) -> Any:
+    """Slice layer `i` out of a stacked (possibly tiered) layer tree.
+
+    `TieredArray` is a pytree whose split axis is negative (registry
+    convention), so slicing the leading stack axis off both tier buffers
+    yields a valid per-layer `TieredArray`."""
+    return jax.tree.map(lambda a: a[i], layers)
+
+
 def split_cache_batch(cache: dict[str, jax.Array], kv_ratio: float,
                       align: int = 1) -> dict[str, Any]:
     """Batch-split a dense KV cache {k,v: [L,B,S,K,hd]} across tiers
-    (paper §5: SplitK_FlashAttn partitions the KV cache along batch)."""
+    (paper §5: SplitK_FlashAttn partitions the KV cache along batch).
+
+    Deprecated serving-side (the paged cache replaces it); retained for the
+    paper's batch-partitioned kernel experiments."""
     b = cache["k"].shape[1]
     b_rem = int(round(b * kv_ratio / align)) * align
     b_loc = b - b_rem
@@ -88,69 +114,114 @@ def split_cache_batch(cache: dict[str, jax.Array], kv_ratio: float,
 
 
 # --------------------------------------------------------------------------
-# Shared decode transformer body.  The cache layouts differ only in how the
-# new K/V row is written and how attention gathers the cache, so both steps
-# share this body and inject a `write_and_attend(layer, q, k_new, v_new)`
-# callback (q [B,Hp,hd]; k_new/v_new [B,1,Kh,hd]; returns attn [B,Hp,hd]).
+# Attention bodies.  The cache layouts differ only in how the new K/V row is
+# written and how attention gathers the cache, so every decode step injects
+# a `write_and_attend(layer, q, k_new, v_new, scale=None)` callback
+# (q [B,Hq,w]; k_new/v_new [B,1,Kh,w]; returns attn [B,Hq,w]).
 # --------------------------------------------------------------------------
+WriteAndAttend = Callable[..., jax.Array]
+
+
+def _gqa_attend(
+    cfg: ModelConfig, lp: dict[str, Any], hn: jax.Array, positions: jax.Array,
+    idx: int, window: int, use_kernel: bool, write_and_attend: WriteAndAttend,
+) -> jax.Array:
+    """GQA attention over the injected cache: returns [B,1,Hp*hd] (pre-wo)."""
+    hd, hp = cfg.resolved_head_dim, cfg.padded_heads
+    b = hn.shape[0]
+
+    def kmm(a, w):
+        return _mm(a, w, window, use_kernel)
+
+    q, k_new, v_new = L.qkv_project(cfg, hn, lp, mm=kmm)
+    q, k_new = L._maybe_qk_norm(cfg, q, k_new, lp)
+    rot = int(hd * cfg.rope_fraction)
+    if rot:
+        cos, sin = L.rope_cos_sin(positions[:, None], rot, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin, rot)
+        k_new = L.apply_rope(k_new, cos, sin, rot)
+    attn = write_and_attend(idx, q[:, 0], k_new, v_new)     # [B,Hp,hd]
+    return attn.reshape(b, 1, hp * hd)
+
+
+def _mla_attend(
+    cfg: ModelConfig, lp: dict[str, Any], hn: jax.Array, positions: jax.Array,
+    idx: int, window: int, use_kernel: bool, write_and_attend: WriteAndAttend,
+) -> jax.Array:
+    """Absorbed-form MLA over latent-width pages: returns [B,1,H*vd] (pre-wo).
+
+    The page row is the latent ``[ckv | k_rope]`` (one kv head, width
+    rank+rd); q is the absorbed ``[q·W_uk | q_rope]`` so the kernel's
+    score/accumulate runs entirely in latent space (`layers.mla_decode`
+    semantics).  V pages carry ``[ckv | 0]`` — the zero tail contributes
+    nothing and the output is sliced back to the latent rank."""
+    h, nd, rd, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    b = hn.shape[0]
+
+    def kmm(a, w):
+        return _mm(a, w, window, use_kernel)
+
+    q_nope, q_rope = L.mla_project_q(cfg, hn, lp, mm=kmm)         # [B,1,H,*]
+    c_kv, k_rope = L.mla_project_kv_latent(cfg, hn, lp, mm=kmm)   # [B,1,*]
+    cos, sin = L.rope_cos_sin(positions[:, None], rd, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin, rd)
+    k_rope = L.apply_rope(k_rope[..., None, :], cos, sin, rd)[..., 0, :]
+    # wkv_b is HBM-resident by registry design: consumed in absorbed form.
+    w_full = lp["wkv_b"].reshape(rank, h, nd + vd)
+    w_uk, w_uv = w_full[..., :nd], w_full[..., nd:]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)        # [B,H,rank]
+    q_cat = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)       # [B,H,rank+rd]
+    k_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+    # V aliases the K page (v_new=None): probs @ [ckv | k_rope] sliced to
+    # :rank equals probs @ ckv — the rope tail columns are simply dropped —
+    # so the latent is stored once, as the planner's KV accounting assumes.
+    o = write_and_attend(idx, q_cat, k_new, None, scale=(nd + rd) ** -0.5)
+    o_lat = o[..., :rank]                                         # [B,H,rank]
+    return jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(b, 1, h * vd)
+
+
+def _head(cfg: ModelConfig, params: dict[str, Any], x: jax.Array,
+          window: int, use_kernel: bool) -> jax.Array:
+    return M.lm_head(cfg, params, x,
+                     mm=lambda a, w: _mm(a, w, window, use_kernel))
+
+
 def _decode_transformer(
     cfg: ModelConfig,
-    params: dict[str, Any],
+    params: dict[str, Any],          # stacked tree from TieringPlan.partition
     tokens: jax.Array,               # [B,1] int32
     positions: jax.Array,            # [B] int32 per-slot write positions
     window: int,
     use_kernel: bool,
-    write_and_attend: Callable[[int, jax.Array, jax.Array, jax.Array], jax.Array],
+    write_and_attend: WriteAndAttend,
 ) -> jax.Array:
-    hd = cfg.resolved_head_dim
-    hp, kv_h = cfg.padded_heads, cfg.n_kv_heads
+    """Shared decode body for the attention-decoder families (dense, VLM,
+    MoE, MLA): operand-type dispatch picks the attention flavor and FFN per
+    layer; tiered weights run the direct-access kernels."""
     x = params["embed"][tokens]                       # [B,1,d]
-    b = x.shape[0]
 
-    for i, lp in enumerate(params["layers"]):
+    def kmm(a, w):
+        return _mm(a, w, window, use_kernel)
+
+    for i in range(cfg.n_layers):
+        lp = layer_slice(params["layers"], i)
         hn = L.norm(cfg, x, lp, "ln1")
-        q = _mm(hn, lp["wq"], window, use_kernel)
-        k_v = _mm(hn, lp["wkv"], window, use_kernel)
-        if cfg.qkv_bias:
-            q = q + lp["bq"]
-            k_v = k_v + lp["bkv"]
-        k_new, v_new = jnp.split(k_v, 2, axis=-1)
-        q = q.reshape(b, 1, hp, hd)
-        k_new = k_new.reshape(b, 1, kv_h, hd)
-        v_new = v_new.reshape(b, 1, kv_h, hd)
-        if cfg.qk_norm:
-            q = L.rmsnorm(q, lp["q_norm_w"], cfg.norm_eps)
-            k_new = L.rmsnorm(k_new, lp["k_norm_w"], cfg.norm_eps)
-        rot = int(hd * cfg.rope_fraction)
-        if rot:
-            cos, sin = L.rope_cos_sin(positions[:, None], rot, cfg.rope_theta)
-            q = L.apply_rope(q, cos, sin, rot)
-            k_new = L.apply_rope(k_new, cos, sin, rot)
-        attn = write_and_attend(i, q[:, 0], k_new, v_new)[:, None]  # [B,1,Hp,hd]
-        x = x + _mm(attn.reshape(b, 1, hp * hd), lp["wo"], window, use_kernel)
+        attend = _mla_attend if cfg.use_mla else _gqa_attend
+        attn = attend(cfg, lp, hn, positions, i, window, use_kernel,
+                      write_and_attend)
+        x = x + _mm(attn, lp["wo"], window, use_kernel)
         hn2 = L.norm(cfg, x, lp, "ln2")
-        if cfg.mlp == "swiglu":
-            gu = _mm(hn2, lp["wi"], window, use_kernel)
-            gate, up = jnp.split(gu, 2, axis=-1)
-            hmid = jax.nn.silu(gate) * up
+        if cfg.family == "moe":
+            x = x + L.moe_block(cfg, hn2, lp, mm=kmm)
         else:
-            hmid = _mm(hn2, lp["wi"], window, use_kernel)
-            if "bi" in lp:
-                hmid = hmid + lp["bi"]
-            hmid = jax.nn.gelu(hmid)
-        down = _mm(hmid, lp["wdown"], window, use_kernel)
-        if "bdown" in lp:
-            down = down + lp["bdown"]
-        x = x + down
-
-    xn = (L.layernorm(x, params["final_w"], params["final_b"], cfg.norm_eps)
-          if cfg.norm == "layernorm" else L.rmsnorm(x, params["final_w"], cfg.norm_eps))
-    return _mm(xn, params["lm_head"], window, use_kernel)
+            x = x + L.mlp_block(cfg, hn2, lp, mm=kmm)
+    return _head(cfg, params, x, window, use_kernel)
 
 
 def tiered_decode_step(
     cfg: ModelConfig,
-    params: dict[str, Any],          # from partition_dense_params
+    params: dict[str, Any],          # stacked tiered params
     cache: dict[str, Any],           # from split_cache_batch
     tokens: jax.Array,               # [B,1] int32
     pos: int,
@@ -158,11 +229,14 @@ def tiered_decode_step(
     window: int = 2,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, dict[str, Any]]:
-    """One slot-aligned decode step over tiered weights + batch-split KV."""
+    """One slot-aligned decode step over tiered weights + batch-split KV
+    (the paper's §5 layout; dense families only — serving uses the paged
+    step below)."""
     b = tokens.shape[0]
     b_loc = cache["k_local"].shape[1]
 
-    def write_and_attend(i, q, k_new, v_new):
+    def write_and_attend(i, q, k_new, v_new, scale=None):
+        assert scale is None, "batch-split legacy path is dense-only"
         if b_loc > 0:
             cache["k_local"] = jax.lax.dynamic_update_slice(
                 cache["k_local"], _layer_row(k_new[:b_loc], cache["k_local"]),
@@ -189,9 +263,45 @@ def tiered_decode_step(
     return logits, cache
 
 
+def _paged_writer(
+    pools: dict[str, jax.Array],
+    table: jax.Array, tier: jax.Array, attn_lens: jax.Array,
+    wr_tier: jax.Array, wr_idx: jax.Array, wr_off: jax.Array,
+    sink_local: int, sink_remote: int, window: int, use_kernel: bool,
+) -> WriteAndAttend:
+    """write_and_attend over a paged tiered pool set (mutates `pools`).
+
+    Scatters into both pools: the slot's row goes to its real target in one
+    tier and to that tier's sink in the other (never read back); attention
+    gathers each slot's pages from the tier its page table names, masked to
+    ``attn_lens`` (ragged batch).  ``v_new=None`` means the cache is K-only
+    (MLA latent pages): the V read aliases the K pool."""
+
+    def write_and_attend(i, q, k_new, v_new, scale=None):
+        idx_l = jnp.where(wr_tier == 0, wr_idx, sink_local)
+        idx_r = jnp.where(wr_tier == 1, wr_idx, sink_remote)
+        rows = (("k", k_new),) if v_new is None else (("k", k_new), ("v", v_new))
+        for name, new in rows:
+            row = new[:, 0]
+            pl_ = pools[f"{name}_local"]
+            pools[f"{name}_local"] = pl_.at[i, idx_l, wr_off].set(row.astype(pl_.dtype))
+            pr_ = pools[f"{name}_remote"]
+            pools[f"{name}_remote"] = pr_.at[i, idx_r, wr_off].set(row.astype(pr_.dtype))
+        v_name = "k" if v_new is None else "v"
+        layer_pools = {"k_local": pools["k_local"][i],
+                       "k_remote": pools["k_remote"][i],
+                       "v_local": pools[f"{v_name}_local"][i],
+                       "v_remote": pools[f"{v_name}_remote"][i]}
+        return ops.paged_decode_attention(
+            q, layer_pools, table, tier, attn_lens,
+            window=window, scale=scale, use_kernel=use_kernel)
+
+    return write_and_attend
+
+
 def paged_tiered_decode_step(
     cfg: ModelConfig,
-    params: dict[str, Any],          # from partition_dense_params
+    params: dict[str, Any],          # stacked tree from TieringPlan.partition
     pools: dict[str, jax.Array],     # PagedTieredCache.pools {k,v}_{local,remote}
     tokens: jax.Array,               # [B,1] int32
     positions: jax.Array,            # [B] int32 — per-slot write position
@@ -207,34 +317,109 @@ def paged_tiered_decode_step(
     window: int = 2,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """One ragged decode step over tiered weights + paged tiered KV.
+    """One ragged decode step over tiered weights + paged tiered KV for the
+    attention-decoder families (dense / VLM / MoE / MLA).
 
-    Every slot scatters its new K/V row into the page named by
-    (wr_tier, wr_idx, wr_off); idle slots must be pointed at a sink page by
-    the caller.  Attention gathers each slot's pages from the tier its page
-    table names and masks to ``attn_lens`` (ragged batch)."""
+    Every slot scatters its new K/V row (GQA heads, or the MLA latent as a
+    single-head row) into the page named by (wr_tier, wr_idx, wr_off); idle
+    slots must be pointed at a sink page by the caller."""
     pools = dict(pools)
-
-    def write_and_attend(i, q, k_new, v_new):
-        # Scatter into both pools; the slot's row goes to its real target in
-        # one tier and to that tier's sink in the other (never read back).
-        idx_l = jnp.where(wr_tier == 0, wr_idx, sink_local)
-        idx_r = jnp.where(wr_tier == 1, wr_idx, sink_remote)
-        for name, new in (("k", k_new), ("v", v_new)):
-            row = new[:, 0]
-            pl_ = pools[f"{name}_local"]
-            pools[f"{name}_local"] = pl_.at[i, idx_l, wr_off].set(row.astype(pl_.dtype))
-            pr_ = pools[f"{name}_remote"]
-            pools[f"{name}_remote"] = pr_.at[i, idx_r, wr_off].set(row.astype(pr_.dtype))
-        layer_pools = {name: pools[name][i] for name in
-                       ("k_local", "v_local", "k_remote", "v_remote")}
-        return ops.paged_decode_attention(
-            q, layer_pools, table, tier, attn_lens,
-            window=window, use_kernel=use_kernel)
-
+    write_and_attend = _paged_writer(
+        pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,
+        sink_local, sink_remote, window, use_kernel)
     logits = _decode_transformer(
         cfg, params, tokens, positions, window, use_kernel, write_and_attend)
     return logits, pools
+
+
+def tiered_ssm_decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],          # stacked tree from TieringPlan.partition
+    cache: dict[str, jax.Array],     # {conv: [L,B,W-1,C], state: [L,B,H,P,S]}
+    tokens: jax.Array,               # [B,1] int32
+    *,
+    window: int = 2,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One recurrent decode step for pure-SSM decoders over tiered weights.
+
+    No KV cache — the conv window and SSD state are per-slot recurrent
+    state, always HBM-resident; the offloaded operands are the projection
+    stacks (``ssm_in`` / ``ssm_out``), computed by the tiered GEMM."""
+    x = params["embed"][tokens]
+
+    def kmm(a, w):
+        return _mm(a, w, window, use_kernel)
+
+    convs, states = [], []
+    for i in range(cfg.n_layers):
+        lp = layer_slice(params["layers"], i)
+        hn = L.norm(cfg, x, lp, "ln1")
+        y, conv_i, state_i = S.ssm_block_decode(
+            cfg, hn, lp, cache["conv"][i], cache["state"][i], mm=kmm)
+        x = x + y
+        convs.append(conv_i)
+        states.append(state_i)
+    logits = _head(cfg, params, x, window, use_kernel)
+    return logits, {"conv": jnp.stack(convs), "state": jnp.stack(states)}
+
+
+def tiered_hybrid_decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],          # stacked tree from TieringPlan.partition
+    cache: dict[str, jax.Array],     # SSM state {conv, state} (all layers)
+    pools: dict[str, jax.Array],     # paged KV pools (one layer per group)
+    tokens: jax.Array,               # [B,1] int32
+    positions: jax.Array,            # [B] int32 — per-slot write position
+    attn_lens: jax.Array,            # [B] int32 — post-write lengths (0 = idle)
+    table: jax.Array,
+    tier: jax.Array,
+    wr_tier: jax.Array,
+    wr_idx: jax.Array,
+    wr_off: jax.Array,
+    *,
+    sink_local: int,
+    sink_remote: int,
+    window: int = 2,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array], dict[str, jax.Array]]:
+    """One ragged decode step for Zamba2-style hybrids: each group runs its
+    shared attention+MLP block (GQA over the group's paged tiered KV layer)
+    followed by ``hybrid_attn_every`` tiered SSM layers."""
+    pools = dict(pools)
+    write_and_attend = _paged_writer(
+        pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,
+        sink_local, sink_remote, window, use_kernel)
+
+    def kmm(a, w):
+        return _mm(a, w, window, use_kernel)
+
+    x = params["embed"][tokens]
+    h0 = x
+    k_every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k_every
+    n_blocks = max(1, cfg.hybrid_shared_blocks)
+    convs, states = [], []
+    for g_idx in range(n_groups):
+        sp = layer_slice(params["shared"], g_idx % n_blocks)
+        z = jnp.concatenate([x, h0], axis=-1) @ sp["concat_proj"]
+        zn = L.norm(cfg, z, sp, "ln1")
+        attn = _gqa_attend(cfg, sp, zn, positions, g_idx, window, use_kernel,
+                           write_and_attend)
+        z = z + _mm(attn, sp["wo"], window, use_kernel)
+        z = z + L.mlp_block(cfg, L.norm(cfg, z, sp, "ln2"), sp, mm=kmm)
+        x = x + z
+        for j in range(k_every):
+            li = g_idx * k_every + j
+            lp = layer_slice(params["layers"], li)
+            hn = L.norm(cfg, x, lp, "ln1")
+            y, conv_i, state_i = S.ssm_block_decode(
+                cfg, hn, lp, cache["conv"][li], cache["state"][li], mm=kmm)
+            x = x + y
+            convs.append(conv_i)
+            states.append(state_i)
+    logits = _head(cfg, params, x, window, use_kernel)
+    return logits, {"conv": jnp.stack(convs), "state": jnp.stack(states)}, pools
 
 
 def _layer_row(new: jax.Array, cache_ref: jax.Array) -> jax.Array:

@@ -27,6 +27,19 @@ def test_serve_driver_tiered():
         "--offload-ratio", "0.5",
     ])
     assert out["served"] == 3
+    assert out["ttft_p50"] > 0 and out["ttft_p95"] >= out["ttft_p50"]
+
+
+@pytest.mark.slow
+def test_serve_driver_hbm_budget_mode():
+    """--hbm-gb derives the global ratio from the footprint (Fig. 10 mode)."""
+    out = serve.main([
+        "--arch", "llama2_7b", "--smoke", "--requests", "2", "--max-batch", "2",
+        "--prompt-len", "6", "--new-tokens", "2", "--max-len", "24",
+        "--hbm-gb", "0.00002",
+    ])
+    assert out["served"] == 2
+    assert 0.0 < out["global_ratio"] < 1.0
 
 
 def test_compressed_dp_train_step_tracks_uncompressed():
