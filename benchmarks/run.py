@@ -5,10 +5,18 @@ Prints ``name,us_per_call,derived`` CSV.  See per-module docstrings for what
 fraction, modeled TPU µs).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig11]
+  PYTHONPATH=src python -m benchmarks.run --only serving \
+      --json-out BENCH_serving.json
+
+``--json-out`` additionally writes the serving section's machine-readable
+report (static vs adaptive tokens/s, TTFT p50/p95, achieved bandwidth per
+tier) — the ``BENCH_serving.json`` artifact CI uploads so the serving perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -16,25 +24,42 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on section name")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write BENCH_serving.json (runs the serving section)")
     args = ap.parse_args()
 
-    from benchmarks import fig_benchmarks, kernel_micro, roofline
+    from benchmarks import fig_benchmarks, kernel_micro, roofline, serving_bench
 
     sections = {fn.__name__: fn for fn in fig_benchmarks.ALL}
     sections["kernel_micro"] = kernel_micro.rows
     sections["roofline"] = roofline.rows
+    sections["serving"] = serving_bench.rows
 
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in sections.items():
         if args.only and args.only not in name:
             continue
+        if name == "serving" and args.json_out:
+            continue                      # emitted below with the JSON payload
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.3f},{derived:.4f}")
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# section {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if args.json_out and (not args.only or args.only in "serving"):
+        try:
+            rows, report = serving_bench.collect()
+            for row_name, us, derived in rows:
+                print(f"{row_name},{us:.3f},{derived:.4f}")
+            with open(args.json_out, "w") as fh:
+                json.dump(report, fh, indent=2, default=float)
+            print(f"# wrote {args.json_out}", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print("# section serving FAILED", file=sys.stderr)
             traceback.print_exc()
     if failures:
         raise SystemExit(1)

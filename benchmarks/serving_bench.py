@@ -1,0 +1,48 @@
+"""Serving benchmark: static vs adaptive engine on the smoke workload.
+
+Runs the end-to-end serving driver twice — once with the static plan, once
+with the adaptive runtime attached — and emits both the CSV rows the
+benchmark harness prints and the machine-readable ``BENCH_serving.json``
+payload (``benchmarks.run --json-out``), so the serving perf trajectory
+(tokens/s, TTFT percentiles, achieved bandwidth per tier, static vs
+adaptive) is tracked across PRs.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+Row = tuple[str, float, float]
+
+ARGS = [
+    "--arch", "llama2_7b", "--smoke", "--requests", "4", "--max-batch", "2",
+    "--prompt-len", "8", "--new-tokens", "4", "--max-len", "32",
+    "--offload-ratio", "0.5", "--page-size", "4",
+]
+
+
+def collect() -> tuple[list[Row], dict]:
+    from repro.launch.serve import main as serve_main
+
+    static = serve_main(ARGS + ["--bench-json", ""])
+    adaptive = serve_main(ARGS + ["--adaptive", "--bench-json", ""])
+    rows: list[Row] = []
+    for name, rep in (("static", static), ("adaptive", adaptive)):
+        tps = rep["tokens_per_s"]
+        us_per_tok = 1e6 / tps if tps > 0 else 0.0
+        rows.append((f"serving_{name}_tokens_per_s", us_per_tok, tps))
+        rows.append((f"serving_{name}_ttft_p95_ms", rep["ttft_p95_ms"] * 1e3,
+                     rep["ttft_p95_ms"]))
+    rt = adaptive.get("runtime", {})
+    if rt:
+        rows.append(("serving_adaptive_modeled_gain", 0.0,
+                     rt["modeled"]["gain"]))
+        bw = rt["telemetry"]["bandwidth"]
+        rows.append(("serving_achieved_local_bw_gbs", 0.0,
+                     bw["local"]["achieved"] / 1e9))
+        rows.append(("serving_achieved_remote_bw_gbs", 0.0,
+                     bw["remote"]["achieved"] / 1e9))
+    return rows, {"static": static, "adaptive": adaptive}
+
+
+def rows() -> Iterable[Row]:
+    return collect()[0]

@@ -28,6 +28,7 @@ cap.
 from __future__ import annotations
 
 import dataclasses
+from typing import Protocol
 
 from repro.core.hardware import HardwareSpec
 
@@ -58,6 +59,50 @@ class CongestionModel:
         """Aggregate achieved bandwidth for a (streams, window) choice."""
         q = float(n_streams) * window * chunk_bytes
         return self.host_throughput(q) + self.hbm_throughput(q)
+
+
+# ---------------------------------------------------------------------------
+# Pluggable measurement sources (runtime.controller feedback input).
+#
+# The adaptive runtime's AIMD controller is closed over a *measurement
+# source*: anything that can report the achieved per-tier bandwidth at a
+# given in-flight window.  On hardware that is the telemetry ring buffer
+# (`runtime.telemetry`); in tests and in the analytical harness it is the
+# congestion model itself, which makes the controller's convergence to
+# `optimal_window` a deterministic, checkable property.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BandwidthSample:
+    """One per-tier achieved-bandwidth observation."""
+
+    host_bw: float                 # achieved host-link bandwidth (bytes/s)
+    hbm_bw: float                  # achieved local HBM bandwidth (bytes/s)
+
+    @property
+    def aggregate(self) -> float:
+        return self.host_bw + self.hbm_bw
+
+
+class MeasurementSource(Protocol):
+    def measure(self, window: int) -> BandwidthSample:
+        """Achieved per-tier bandwidth with `window` in-flight slots."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSource:
+    """The analytical `CongestionModel` as a measurement source."""
+
+    model: CongestionModel
+    n_streams: int
+    chunk_bytes: int
+
+    def measure(self, window: int) -> BandwidthSample:
+        q = float(self.n_streams) * max(0, window) * self.chunk_bytes
+        return BandwidthSample(
+            host_bw=self.model.host_throughput(q),
+            hbm_bw=self.model.hbm_throughput(q),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,12 +157,20 @@ def optimal_host_streams(
     max_streams: int = 256,
 ) -> int:
     """Paper: cap N_SM_host — provision just enough streams to saturate the
-    link (and to cover the offloaded data), never more."""
-    saturating = 1
-    for s in range(1, max_streams + 1):
-        if model.host_throughput(float(s) * window * chunk_bytes) >= model.hw.host.bandwidth * 0.999:
-            saturating = s
-            break
-    else:
-        saturating = max_streams
-    return max(1, min(max(required_streams, 1), max(saturating, 1)))
+    link (and to cover the offloaded data), never more.
+
+    "Saturate" is judged against the *achievable* peak over the stream
+    range, not the nominal link bandwidth: when the link never reaches
+    ``B_h`` (BDP-limited windows, or a measured/soft-knee throughput curve
+    that plateaus below nominal), the answer is the smallest stream count
+    within tolerance of the best achievable throughput.  The previous
+    ``for/else`` left ``saturating`` at ``max_streams`` whenever the
+    nominal-bandwidth test never fired, silently over-provisioning streams
+    past the plateau."""
+    tput = [model.host_throughput(float(s) * window * chunk_bytes)
+            for s in range(1, max_streams + 1)]
+    best = max(tput)
+    saturating = next(
+        (s for s, th in enumerate(tput, start=1) if th >= best * 0.999),
+        max_streams)
+    return max(1, min(max(required_streams, 1), saturating))

@@ -6,6 +6,12 @@ SplitK_FlashAttn PyTorch modules).  They handle shape alignment ("execution
 wave alignment", paper §4.1), pick interpret mode automatically off-TPU, and
 fall back to the jnp oracle for shapes the kernels do not cover.
 
+``window`` — the number of in-flight remote-DMA slots — is a *per-call*
+value: the serving engine threads the adaptive runtime's AIMD-controlled
+window through every step (`runtime.controller`), so it is normalized here
+(int, >= 1) rather than assumed to be the plan-time constant.  The window
+only schedules DMA issue; results are bitwise-independent of it.
+
 `broadcast_remote` implements pod-level fetch-once-broadcast (the TMA
 multicast analogue, DESIGN.md §2): the host partition is sharded across
 chips, each chip pulls a disjoint slice over its own host link, and slices
@@ -56,6 +62,7 @@ def tiered_matmul(
     interpret: bool | None = None,
 ) -> jax.Array:
     """y = x @ W with W column-partitioned across (HBM, host) tiers."""
+    window = max(1, int(window))
     wl, wr = (w.local, w.remote) if isinstance(w, TieredArray) else w
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -88,6 +95,7 @@ def tiered_decode_attention(
     use_kernel: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
+    window = max(1, int(window))
     kl, vl = kv["k_local"], kv["v_local"]
     kr, vr = kv["k_remote"], kv["v_remote"]
     s = kl.shape[1]
@@ -113,6 +121,7 @@ def paged_decode_attention(
     """Ragged paged tiered decode attention (per-slot kv lengths; each page
     fetched from the tier its page-table entry names).  ``scale`` overrides
     the ``hd**-0.5`` softmax scale (MLA latent-width pages)."""
+    window = max(1, int(window))
     kl, vl = pools["k_local"], pools["v_local"]
     kr, vr = pools["k_remote"], pools["v_remote"]
     if not use_kernel:

@@ -8,10 +8,19 @@ Two planning modes (paper Fig. 8-10):
 * ``--offload-ratio R`` pins the global offload ratio directly (sweep mode);
 * ``--hbm-gb G`` derives the ratio from a real HBM budget —
   ``OR = max(0, 1 - budget / footprint)`` — the paper's Fig. 10 mode.
+
+``--adaptive`` attaches the adaptive runtime (`repro.runtime`): AIMD
+congestion-window control, phase-aware re-planning and budgeted live page
+migration, with per-step telemetry.  ``--bench-json PATH`` writes the
+machine-readable benchmark report (tokens/s, TTFT percentiles, achieved
+vs predicted bandwidth per tier, modeled static-vs-adaptive throughput);
+with ``--adaptive`` it defaults to ``BENCH_serving.json`` so the perf
+trajectory is tracked across PRs (the CI smoke job uploads it).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -20,6 +29,37 @@ import numpy as np
 import repro.configs as C
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
+
+
+def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
+    """The BENCH_serving.json schema: one flat dict per serving run."""
+    report = {
+        "arch": args.arch,
+        "smoke": bool(args.smoke),
+        "adaptive": bool(args.adaptive),
+        "requests": args.requests,
+        "served": stats.served,
+        "global_ratio": engine.plan.global_ratio,
+        "wall_s": wall,
+        "generated_tokens": stats.generated_tokens,
+        # tokens *actually emitted* (early-EOS requests count what they
+        # produced, not their budget) per wall second
+        "tokens_per_s": stats.generated_tokens / wall if wall > 0 else 0.0,
+        "tpot_ms": stats.tpot * 1e3,
+        "ttft_p50_ms": stats.ttft_p50 * 1e3,
+        "ttft_p95_ms": stats.ttft_p95 * 1e3,
+        "decode_steps": stats.decode_steps,
+        "kv": {
+            "spills": stats.spills,
+            "local_pages_hwm": stats.local_pages_hwm,
+            "remote_pages_hwm": stats.remote_pages_hwm,
+        },
+        "window": {"static": engine.plan.window.n_inflight,
+                   "final": stats.final_window},
+    }
+    if engine.runtime is not None:
+        report["runtime"] = engine.runtime.report()
+    return report
 
 
 def main(argv: list[str] | None = None) -> dict:
@@ -38,7 +78,15 @@ def main(argv: list[str] | None = None) -> dict:
                          "model footprint (paper Fig. 10 mode)")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--no-kernels", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="attach the adaptive runtime (AIMD window control, "
+                         "phase-aware re-planning, live page migration)")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="write the machine-readable benchmark report here "
+                         "(default BENCH_serving.json with --adaptive)")
     args = ap.parse_args(argv)
+    if args.bench_json is None and args.adaptive:
+        args.bench_json = "BENCH_serving.json"
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -46,11 +94,13 @@ def main(argv: list[str] | None = None) -> dict:
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
         global_offload_ratio=None if args.hbm_gb is not None else args.offload_ratio,
-        use_kernels=not args.no_kernels, page_size=args.page_size)
+        use_kernels=not args.no_kernels, page_size=args.page_size,
+        adaptive=args.adaptive)
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
-          f"window={engine.plan.window.n_inflight} tiered={engine.tiered}")
+          f"window={engine.plan.window.n_inflight} tiered={engine.tiered} "
+          f"adaptive={args.adaptive}")
     if args.hbm_gb is not None:
         print(f"budget: {args.hbm_gb:.1f} GB HBM vs "
               f"{engine.plan.footprint_bytes / 1e9:.1f} GB footprint")
@@ -73,10 +123,22 @@ def main(argv: list[str] | None = None) -> dict:
         print(f"kv pages: size={pp.page_size} local={pp.local_pages} "
               f"remote={pp.remote_pages} | peak local={stats.local_pages_hwm} "
               f"peak remote={stats.remote_pages_hwm} spills={stats.spills}")
-    return {"served": stats.served, "tpot": stats.tpot, "wall": wall,
-            "spills": stats.spills, "ttft_p50": stats.ttft_p50,
-            "ttft_p95": stats.ttft_p95,
-            "global_ratio": engine.plan.global_ratio}
+    if engine.runtime is not None:
+        rt = engine.runtime.report()
+        w, mig, mod = rt["window"], rt["migration"], rt["modeled"]
+        print(f"runtime: window {w['static']}->{w['final']} "
+              f"(converged={w['converged']}) | replans {rt['replans']} | "
+              f"pages promoted {mig['promoted']} demoted {mig['demoted']} | "
+              f"modeled tokens/s static {mod['static_tokens_per_s']:.3g} "
+              f"adaptive {mod['adaptive_tokens_per_s']:.3g} "
+              f"(gain {mod['gain']:.3f})")
+
+    report = bench_report(args, engine, stats, wall)
+    if args.bench_json:
+        with open(args.bench_json, "w") as fh:
+            json.dump(report, fh, indent=2, default=float)
+        print(f"wrote {args.bench_json}")
+    return report
 
 
 if __name__ == "__main__":

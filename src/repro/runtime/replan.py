@@ -1,0 +1,146 @@
+"""Phase-aware re-planning — per-op ratios that track the live workload.
+
+The greedy allocator (`core.planner.solve`) is provably optimal *for the
+workload it was handed*; the serving engine hands it the steady-state
+decode workload once, at startup.  But an op's boundness — and therefore
+its optimal offload ratio — is phase-dependent (paper §4.2.1: prefill
+attention is compute-bound where decode attention is memory-bound), so a
+shifting prefill/decode mix strands the plan away from the optimum.
+
+:class:`Replanner` watches the telemetry EMA of the prefill token fraction
+(and the observed batch / KV-length) and, when the mix drifts past
+``drift_threshold`` from the mix the current plan was solved for, re-runs
+the full planning pass on the *observed* workload.  :func:`repartition`
+then realizes the new ratios incrementally: only operands whose realized
+split extents actually moved are re-split (materialize → re-partition —
+bitwise-identical to a fresh partition of the original params); every
+other leaf passes through as the same object, so an unchanged plan is a
+strict no-op.
+
+Pool budgets are *not* resized on re-plan: the KV page pools are fixed
+jnp allocations, so KV-ratio drift is absorbed by the live page migrator
+(`runtime.migration`) moving pages within the existing pools.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from repro.configs.base import ModelConfig
+from repro.core import engine as offload_engine
+from repro.core import tiering
+from repro.core.engine import _copy_tree, _set_path
+from repro.core.ebmodel import WorkloadSpec
+from repro.core.hardware import HardwareSpec
+from repro.models.registry import resolve
+from repro.runtime.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanPolicy:
+    drift_threshold: float = 0.25   # |observed mix − planned mix| that triggers
+    min_interval: int = 4           # steps between consecutive re-plans
+    warmup_steps: int = 2           # steps of telemetry before the first re-plan
+
+
+class Replanner:
+    """Re-run the greedy allocator when the observed workload mix drifts."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        hw: HardwareSpec,
+        base_plan: offload_engine.TieringPlan,
+        *,
+        policy: ReplanPolicy | None = None,
+    ):
+        self.cfg = cfg
+        self.hw = hw
+        self.plan = base_plan
+        self.policy = policy or ReplanPolicy()
+        # Mix the current plan was solved for: the startup plan is the
+        # steady-state decode solve (prefill fraction 0).
+        self.planned_mix = 0.0
+        self.replans = 0
+        self._last_replan_step = -(10 ** 9)
+
+    def drift(self, telemetry: Telemetry) -> float:
+        return abs(telemetry.prefill_fraction - self.planned_mix)
+
+    def observed_workload(self, telemetry: Telemetry) -> WorkloadSpec:
+        """The workload the telemetry EMAs describe."""
+        phase = "prefill" if telemetry.prefill_fraction >= 0.5 else "decode"
+        batch = max(1, round(telemetry.mean_batch)) if phase == "decode" else 1
+        seq = max(1, round(telemetry.mean_kv_len))
+        if phase == "prefill":
+            # Mean admitted prompt length ≈ prefill tokens per prefill step.
+            steps = max(1, telemetry.total_steps)
+            seq = max(1, round(telemetry.total_prefill_tokens / steps), seq)
+        return WorkloadSpec(batch=batch, seq_len=seq, phase=phase)
+
+    def maybe_replan(self, telemetry: Telemetry) -> offload_engine.TieringPlan | None:
+        """Returns a new plan when the mix drifted past threshold, else None."""
+        pol = self.policy
+        if not math.isfinite(pol.drift_threshold):
+            return None
+        if telemetry.total_steps < pol.warmup_steps:
+            return None
+        if telemetry.total_steps - self._last_replan_step < pol.min_interval:
+            return None
+        if self.drift(telemetry) <= pol.drift_threshold:
+            return None
+        wl = self.observed_workload(telemetry)
+        page_size = (self.plan.kv_pages.page_size
+                     if self.plan.kv_pages is not None else 16)
+        new = offload_engine.plan(
+            self.cfg, wl, self.hw, global_ratio=self.plan.global_ratio,
+            kv_page_size=page_size)
+        self.planned_mix = telemetry.prefill_fraction
+        self.plan = new
+        self.replans += 1
+        self._last_replan_step = telemetry.total_steps
+        return new
+
+
+def repartition(
+    params: dict[str, Any],
+    new_plan: offload_engine.TieringPlan,
+    *,
+    align: int = 1,
+) -> tuple[dict[str, Any], list[str]]:
+    """Incrementally realize `new_plan`'s ratios on an already-partitioned
+    params tree.  The current split state is read off the leaves themselves
+    (a `TieredArray`'s remote extent), so the caller does not need to
+    thread the superseded plan through.
+
+    Only operands whose *realized* split extents move are touched: each is
+    materialized (tier concatenation — the exact inverse of `partition`)
+    and re-split at the new boundary, which is bitwise-identical to
+    partitioning the original params fresh.  Operands whose rounded remote
+    extent is unchanged — including every one whose ratio did not move —
+    pass through as the identical leaf object.
+
+    Returns ``(new_params, changed_paths)``.
+    """
+    out = _copy_tree(params)
+    changed: list[str] = []
+    for od in new_plan.registry:
+        new_r = new_plan.op_ratios.get(od.op, 0.0)
+        leaf = resolve(params, od.path)
+        is_tiered = isinstance(leaf, tiering.TieredArray)
+        dim = leaf.shape[od.axis]
+        align_eff = od.align if od.align is not None else align
+        _, tgt_remote = tiering.split_sizes(dim, max(0.0, new_r), align_eff)
+        cur_remote = leaf.remote.shape[od.axis] if is_tiered else 0
+        if tgt_remote == cur_remote:
+            continue
+        full = leaf.materialize() if is_tiered else leaf
+        if tgt_remote == 0:
+            _set_path(out, od.path, full)
+        else:
+            _set_path(out, od.path,
+                      tiering.partition(full, new_r, axis=od.axis,
+                                        align=align_eff))
+        changed.append(od.path_str)
+    return out, changed

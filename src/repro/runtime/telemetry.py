@@ -1,0 +1,268 @@
+"""Per-step serving telemetry — the adaptive runtime's measurement plane.
+
+Two data structures:
+
+* :class:`Telemetry` — a ring buffer of :class:`StepSample` records (bytes
+  moved per tier, step duration, queue depth, prefill/decode token mix,
+  in-flight window) with EMA aggregates.  The re-planner and the serving
+  report read from here, and :class:`TelemetrySource` adapts the achieved
+  EMAs into the controller's `MeasurementSource` protocol (the engine's
+  default measurement source stays the analytical model — CPU-interpret
+  wall-clock is noise; hardware deployments plug the adapter in).
+  Nothing else keeps its own counters.
+* :class:`PageTouchHistogram` — decayed touch counts per (tier, pool page)
+  of the paged KV cache.  This is the single source of truth for page
+  temperature: `serving.paged_cache.PagedTieredCache` records a touch on
+  every page it writes or attends and asks the histogram for its spill
+  victim; `runtime.migration` asks it for promotion/demotion candidates.
+
+Pure numpy/stdlib — no jax, no serving imports — so it can sit below both
+`serving.paged_cache` and the rest of `repro.runtime`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSample:
+    """Counters for one engine step (prefill admissions + one decode)."""
+
+    step: int
+    duration_s: float                  # wall-clock time of the step
+    prefill_tokens: int                # prompt tokens prefetched this step
+    decode_tokens: int                 # one per active slot
+    queue_depth: int                   # requests still waiting after admission
+    active_slots: int
+    mean_kv_len: float                 # mean kv length over active slots
+    local_bytes: float                 # bytes streamed from the HBM tier
+    remote_bytes: float                # bytes streamed over the host link
+    window: int                        # in-flight DMA window used this step
+
+    @property
+    def tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def prefill_fraction(self) -> float:
+        return self.prefill_tokens / self.tokens if self.tokens else 0.0
+
+
+def _ema(prev: float | None, value: float, alpha: float) -> float:
+    return value if prev is None else alpha * value + (1.0 - alpha) * prev
+
+
+class Telemetry:
+    """Ring buffer of step samples + EMA aggregates.
+
+    ``predicted_local_bw`` / ``predicted_remote_bw`` carry the planner's
+    model-predicted bandwidths so reports can show achieved vs predicted
+    side by side; they are set once from the `TieringPlan` and never
+    updated by samples.
+    """
+
+    def __init__(self, capacity: int = 64, ema_alpha: float = 0.25,
+                 predicted_local_bw: float = 0.0,
+                 predicted_remote_bw: float = 0.0):
+        if capacity <= 0:
+            raise ValueError("telemetry ring capacity must be positive")
+        self.ring: deque[StepSample] = deque(maxlen=capacity)
+        self.alpha = ema_alpha
+        self.predicted_local_bw = predicted_local_bw
+        self.predicted_remote_bw = predicted_remote_bw
+        self.total_steps = 0
+        self.total_prefill_tokens = 0
+        self.total_decode_tokens = 0
+        self.total_local_bytes = 0.0
+        self.total_remote_bytes = 0.0
+        self._ema_local_bw: float | None = None
+        self._ema_remote_bw: float | None = None
+        self._ema_mix: float | None = None
+        self._ema_queue: float | None = None
+        self._ema_kv_len: float | None = None
+        self._ema_batch: float | None = None
+
+    def record(self, sample: StepSample) -> None:
+        self.ring.append(sample)
+        self.total_steps += 1
+        self.total_prefill_tokens += sample.prefill_tokens
+        self.total_decode_tokens += sample.decode_tokens
+        self.total_local_bytes += sample.local_bytes
+        self.total_remote_bytes += sample.remote_bytes
+        dt = max(sample.duration_s, 1e-12)
+        self._ema_local_bw = _ema(self._ema_local_bw, sample.local_bytes / dt, self.alpha)
+        self._ema_remote_bw = _ema(self._ema_remote_bw, sample.remote_bytes / dt, self.alpha)
+        self._ema_mix = _ema(self._ema_mix, sample.prefill_fraction, self.alpha)
+        self._ema_queue = _ema(self._ema_queue, float(sample.queue_depth), self.alpha)
+        self._ema_kv_len = _ema(self._ema_kv_len, sample.mean_kv_len, self.alpha)
+        self._ema_batch = _ema(self._ema_batch, float(sample.active_slots), self.alpha)
+
+    # -- EMA aggregates ----------------------------------------------------
+    @property
+    def achieved_local_bw(self) -> float:
+        return self._ema_local_bw or 0.0
+
+    @property
+    def achieved_remote_bw(self) -> float:
+        return self._ema_remote_bw or 0.0
+
+    @property
+    def prefill_fraction(self) -> float:
+        """EMA of the per-step prefill token share (the workload mix)."""
+        return self._ema_mix or 0.0
+
+    @property
+    def queue_depth(self) -> float:
+        return self._ema_queue or 0.0
+
+    @property
+    def mean_kv_len(self) -> float:
+        return self._ema_kv_len or 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self._ema_batch or 0.0
+
+    def window_trace(self) -> list[int]:
+        return [s.window for s in self.ring]
+
+    def report(self) -> dict:
+        """Machine-readable snapshot (BENCH_serving.json 'telemetry' key)."""
+        return {
+            "steps": self.total_steps,
+            "prefill_tokens": self.total_prefill_tokens,
+            "decode_tokens": self.total_decode_tokens,
+            "prefill_fraction_ema": self.prefill_fraction,
+            "queue_depth_ema": self.queue_depth,
+            "bandwidth": {
+                "local": {"achieved": self.achieved_local_bw,
+                          "predicted": self.predicted_local_bw},
+                "remote": {"achieved": self.achieved_remote_bw,
+                           "predicted": self.predicted_remote_bw},
+            },
+            "bytes": {"local": self.total_local_bytes,
+                      "remote": self.total_remote_bytes},
+        }
+
+
+class TelemetrySource:
+    """The telemetry EMAs as a `congestion.MeasurementSource`.
+
+    On hardware this closes the controller's loop over *observed*
+    bandwidth: ``measure`` reports the ring buffer's achieved per-tier
+    EMAs (the ``window`` argument is ignored — the samples were taken at
+    whatever window the engine actually ran).  The serving engine's
+    default remains the analytical `congestion.ModelSource` because this
+    reproduction's CPU-interpret wall-clock is noise, but the adapter is
+    what a TPU deployment plugs into ``RuntimeController(source=...)``.
+    """
+
+    def __init__(self, telemetry: Telemetry):
+        self.telemetry = telemetry
+
+    def measure(self, window: int):
+        from repro.core.congestion import BandwidthSample
+
+        return BandwidthSample(host_bw=self.telemetry.achieved_remote_bw,
+                               hbm_bw=self.telemetry.achieved_local_bw)
+
+
+class PageTouchHistogram:
+    """Decayed touch counts per (tier, pool index) KV page.
+
+    ``touch`` adds ``weight`` heat to a page and stamps it with a global
+    monotone counter; ``advance`` (once per engine step) decays every
+    page's heat by ``decay``.  Temperature ordering is ``(heat, stamp)``:
+    colder = less accumulated recent heat, ties broken by least-recent
+    touch — which reproduces the old allocation-stamp behaviour (oldest
+    page spills first) when all pages are touched equally.
+    """
+
+    def __init__(self, decay: float = 0.85):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.decay = decay
+        self._heat: dict[tuple[int, int], float] = {}
+        self._stamp: dict[tuple[int, int], int] = {}
+        self._clock = 0
+
+    def touch(self, tier: int, index: int, weight: float = 1.0) -> None:
+        key = (tier, int(index))
+        self._clock += 1
+        self._heat[key] = self._heat.get(key, 0.0) + weight
+        self._stamp[key] = self._clock
+
+    def advance(self) -> None:
+        """One step of exponential decay (call once per engine step)."""
+        if self.decay >= 1.0:
+            return
+        for key in self._heat:
+            self._heat[key] *= self.decay
+
+    def heat(self, tier: int, index: int) -> float:
+        return self._heat.get((tier, int(index)), 0.0)
+
+    def forget(self, tier: int, index: int) -> None:
+        """Drop a page's history (freed back to the pool)."""
+        key = (tier, int(index))
+        self._heat.pop(key, None)
+        self._stamp.pop(key, None)
+
+    def retag(self, tier_from: int, index_from: int,
+              tier_to: int, index_to: int) -> None:
+        """Move a page's heat with it across a tier migration."""
+        src = (tier_from, int(index_from))
+        dst = (tier_to, int(index_to))
+        self._heat[dst] = self._heat.pop(src, 0.0)
+        self._stamp[dst] = self._stamp.pop(src, self._clock)
+
+    # -- temperature ordering ---------------------------------------------
+    def temperature(self, tier: int, index: int) -> tuple[float, int]:
+        """Sort key: (decayed heat, last-touch stamp) — colder sorts first."""
+        k = (tier, int(index))
+        return (self._heat.get(k, 0.0), self._stamp.get(k, 0))
+
+    def coldest(self, tier: int, candidates: Iterable[int]) -> int:
+        cands = list(candidates)
+        if not cands:
+            raise ValueError("no candidate pages")
+        return min(cands, key=lambda i: (*self.temperature(tier, i), i))
+
+    def hottest(self, tier: int, candidates: Iterable[int]) -> int:
+        cands = list(candidates)
+        if not cands:
+            raise ValueError("no candidate pages")
+        return max(cands, key=lambda i: (*self.temperature(tier, i), -i))
+
+    def ranked(self, tier: int, candidates: Iterable[int],
+               hottest_first: bool = True) -> list[int]:
+        return sorted(candidates,
+                      key=lambda i: (*self.temperature(tier, i), i),
+                      reverse=hottest_first)
+
+
+def weight_tier_bytes(params) -> tuple[float, float]:
+    """(local_bytes, remote_bytes) for one full read of a params tree.
+
+    `TieredArray` leaves contribute to both tiers; plain array leaves are
+    HBM-resident.  Used by the engine to account per-step weight traffic
+    (decode reads every weight once per step).
+    """
+    import jax
+
+    local = remote = 0.0
+
+    def visit(leaf):
+        nonlocal local, remote
+        if hasattr(leaf, "local") and hasattr(leaf, "remote"):
+            local += leaf.local.size * leaf.local.dtype.itemsize
+            remote += leaf.remote.size * leaf.remote.dtype.itemsize
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            local += leaf.size * leaf.dtype.itemsize
+
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: hasattr(x, "materialize")):
+        visit(leaf)
+    return local, remote

@@ -22,6 +22,16 @@ operand type, for every decoder family:
 
 The reference pjit path (`models.decode_step`) accepts the same tiered
 params and serves as the no-kernel fallback.
+
+With ``adaptive=True`` the engine closes the loop through the adaptive
+runtime (`repro.runtime`): every step it reports a telemetry sample
+(bytes per tier, queue depth, prefill/decode token mix) to a
+`RuntimeController`, reads back the AIMD-controlled in-flight DMA window
+(threaded per-step into the kernels instead of the plan-time constant),
+lets the bounded-budget migrator re-place KV pages between tiers, and —
+when the observed workload mix drifts — swaps in incrementally
+repartitioned params from the phase-aware re-planner.  With every runtime
+budget at zero the adaptive engine is bitwise-identical to the static one.
 """
 from __future__ import annotations
 
@@ -40,6 +50,8 @@ from repro.core import engine as offload_engine
 from repro.core.ebmodel import WorkloadSpec
 from repro.core.hardware import HardwareSpec, TPU_V5E
 from repro.models import model as M
+from repro.runtime.controller import RuntimeController
+from repro.runtime.telemetry import StepSample, weight_tier_bytes
 from repro.serving import tiered_decode as TD
 from repro.serving.paged_cache import PagedTieredCache
 
@@ -63,12 +75,17 @@ class Request:
 @dataclasses.dataclass
 class EngineStats:
     served: int = 0
+    generated_tokens: int = 0              # tokens actually emitted (all reqs)
     decode_steps: int = 0
     decode_time: float = 0.0
     prefill_time: float = 0.0
     local_pages_hwm: int = 0               # peak pages resident per tier
     remote_pages_hwm: int = 0
-    spills: int = 0                        # local->remote page migrations
+    spills: int = 0                        # pressure-driven local->remote moves
+    promoted_pages: int = 0                # migration: remote->local
+    demoted_pages: int = 0                 # migration: local->remote
+    replans: int = 0                       # phase-aware re-planner firings
+    final_window: int = 0                  # in-flight DMA window after the run
     ttfts: list[float] = dataclasses.field(default_factory=list)
     # per-request time-to-first-token (t_first - t_submit), appended at admit
 
@@ -101,6 +118,8 @@ class ServingEngine:
         global_offload_ratio: float | None = None,
         use_kernels: bool = True,
         page_size: int = 8,
+        adaptive: bool = False,
+        runtime: RuntimeController | None = None,
     ):
         self.cfg = cfg
         self.max_batch = max_batch
@@ -112,14 +131,22 @@ class ServingEngine:
             cfg, wl, hw, hbm_budget_bytes=hbm_budget_bytes,
             global_ratio=global_offload_ratio, kv_page_size=page_size)
         self.window = self.plan.window.n_inflight
+        self._align = 32 if cfg.d_model < 1024 else 128
         # One partition pass for every family (the unified API); at ratio 0
         # no leaf is wrapped and the kernel path runs over plain weights.
         self.tiered = self.use_kernels
         if self.tiered:
-            self.params = self.plan.partition(
-                params, align=32 if cfg.d_model < 1024 else 128)
+            self.params = self.plan.partition(params, align=self._align)
         else:
             self.params = params
+        # Adaptive runtime: seeded from the static plan; pass `runtime` to
+        # override budgets/measurement source (tests use the zero-budget
+        # no-op configuration and the analytical model source).
+        self.runtime: RuntimeController | None = runtime
+        if adaptive and self.runtime is None:
+            self.runtime = RuntimeController(cfg, self.plan, hw,
+                                             align=self._align)
+        self._weight_bytes = weight_tier_bytes(self.params)
 
         dtype = next(iter(jax.tree.leaves(params))).dtype
         self.pcache: PagedTieredCache | None = None
@@ -138,7 +165,9 @@ class ServingEngine:
         self.active: list[Request | None] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
+        self.stats.final_window = self.window
         self._next_tok = np.zeros((max_batch, 1), dtype=np.int32)
+        self._prefill_calls_step = 0       # prefill passes in the last _admit
 
     def _make_pcache(self, n_kv_layers: int, dtype) -> PagedTieredCache:
         cfg = self.cfg
@@ -168,26 +197,32 @@ class ServingEngine:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
-    def _admit(self) -> None:
+    def _admit(self) -> int:
         """Prefill queued requests into free slots (one at a time — prompt
-        lengths vary; production would bucket them).
+        lengths vary; production would bucket them).  Returns the number of
+        prompt tokens prefetched (the telemetry prefill mix).
 
         Prefill runs directly over the tiered params (operand dispatch in
         `models.layers`): remote weight partitions are streamed, never
         concatenated back into HBM.  A request whose prefill-produced first
         token is EOS (or whose budget is a single token) finishes here
         without occupying a slot or burning decode steps."""
+        prefill_tokens = 0
+        self._prefill_calls_step = 0
         free = self._free_slots()
         fi = 0
         while fi < len(free) and self.queue:
             slot = free[fi]
             req = self.queue.popleft()
+            prefill_tokens += len(req.prompt)
+            self._prefill_calls_step += 1
             t0 = time.time()
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, cache1 = M.prefill(self.cfg, self.params,
                                        {"tokens": tokens}, max_len=self.max_len)
             nxt = int(jnp.argmax(logits[0, -1]))
             req.out_tokens.append(nxt)
+            self.stats.generated_tokens += 1
             req.t_first = time.time()
             self.stats.prefill_time += req.t_first - t0
             self.stats.ttfts.append(req.t_first - req.t_submit)
@@ -201,6 +236,7 @@ class ServingEngine:
             self.active[slot] = req
             self._note_occupancy()
             fi += 1
+        return prefill_tokens
 
     def params_for_prefill(self) -> dict[str, Any]:
         """Deprecated shim: prefill no longer materializes the tiers —
@@ -245,11 +281,24 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self) -> None:
         """One decode step for all active slots (ragged: each slot at its
-        own position)."""
-        self._admit()
+        own position).  With the adaptive runtime attached, the in-flight
+        DMA window is re-read from the controller every step and a
+        telemetry sample is reported after the compute."""
+        t_step = time.time()
+        if self.runtime is not None:
+            self.window = self.runtime.window
+        prefill_tokens = self._admit()
         if not any(r is not None for r in self.active):
+            if prefill_tokens:
+                self._runtime_step(t_step, prefill_tokens,
+                                   np.zeros(self.max_batch, dtype=bool))
             return
         active = np.array([r is not None for r in self.active])
+        if self.pcache is not None:
+            # Heat bookkeeping is unconditional: the histogram is the single
+            # source of page temperature (spill victims included), so static
+            # and adaptive runs see identical placement decisions.
+            self.pcache.touch_step(self.lens, active)
         tokens = jnp.asarray(self._next_tok)
         positions = np.where(active, self.lens, 0).astype(np.int32)
         t0 = time.time()
@@ -287,12 +336,14 @@ class ServingEngine:
         logits.block_until_ready()
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
+        self._runtime_step(t_step, prefill_tokens, active)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
             self.lens[slot] += 1
             done = (len(req.out_tokens) >= req.max_new_tokens
                     or tok == req.eos_id
@@ -306,6 +357,47 @@ class ServingEngine:
                     self.pcache.free_slot(slot)
             else:
                 self._next_tok[slot, 0] = tok
+
+    def _runtime_step(self, t_step: float, prefill_tokens: int,
+                      active: np.ndarray) -> None:
+        """Report one step to the adaptive runtime and apply its actions:
+        window update (read back at the top of the next step), bounded page
+        migration, and — on a re-plan — the repartitioned params tree."""
+        if self.runtime is None:
+            return
+        n_active = int(active.sum())
+        # Traffic accounting: decode reads every weight once per step, each
+        # prefill pass reads them once more; KV traffic follows the page
+        # table's tier map.
+        w_local, w_remote = self._weight_bytes
+        passes = (1 if n_active else 0) + self._prefill_calls_step
+        local_b, remote_b = w_local * passes, w_remote * passes
+        if self.pcache is not None and n_active:
+            kv_local, kv_remote = self.pcache.attended_bytes(self.lens, active)
+            local_b += kv_local
+            remote_b += kv_remote
+        sample = StepSample(
+            step=self.stats.decode_steps,
+            duration_s=max(time.time() - t_step, 1e-9),
+            prefill_tokens=prefill_tokens,
+            decode_tokens=n_active,
+            queue_depth=len(self.queue),
+            active_slots=n_active,
+            mean_kv_len=float(self.lens[active].mean()) if n_active else 0.0,
+            local_bytes=local_b,
+            remote_bytes=remote_b,
+            window=self.window)
+        new_params = self.runtime.on_step(sample, cache=self.pcache,
+                                          params=self.params)
+        if new_params is not None and new_params is not self.params:
+            self.params = new_params
+            self._weight_bytes = weight_tier_bytes(self.params)
+        rs = self.runtime.stats
+        self.stats.replans = rs.replans
+        self.stats.promoted_pages = rs.promoted_pages
+        self.stats.demoted_pages = rs.demoted_pages
+        self.stats.final_window = self.runtime.window
+        self._note_occupancy()
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0

@@ -13,9 +13,17 @@ rest (`core.engine.kv_page_plan`).
 Placement policy — hottest-first stays local: new pages (the tail of a
 sequence, rewritten/attended every step and still being filled) allocate
 from the local pool; when the local budget fills, the *coldest* local page
-(oldest allocation stamp, i.e. the earliest prompt tokens) spills to the
-remote pool to make room.  Finished requests return their pages to the free
-lists.
+spills to the remote pool to make room.  Finished requests return their
+pages to the free lists.
+
+Page temperature is the shared touch histogram
+(`runtime.telemetry.PageTouchHistogram`) — the cache records a touch for
+every page it allocates, writes or attends (:meth:`touch_step`), and both
+the spill victim choice here and the live migrator
+(`runtime.migration.Migrator`, via :meth:`move_pages`) read the same
+histogram, so there is exactly one source of truth for page heat.  With
+only allocation-order touches the coldest page is the oldest one — the
+pre-histogram behaviour.
 
 Storage is a pair of jnp pools per K/V — ``[L, P+1, page, Kh, hd]`` — whose
 last page index is a write *sink*: decode steps scatter the new K/V row of
@@ -31,6 +39,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.telemetry import PageTouchHistogram
 
 LOCAL, REMOTE = 0, 1
 
@@ -59,6 +69,7 @@ class PagedTieredCache:
         max_pages_per_slot: int,
         dtype=jnp.float32,
         store_v: bool = True,
+        temperature: PageTouchHistogram | None = None,
     ):
         """``store_v=False`` allocates K pages only (MLA: the latent
         ``[ckv | k_rope]`` row serves as both K and V — the attention
@@ -92,11 +103,14 @@ class PagedTieredCache:
         self.table = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
         self.tier = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
         self.n_pages = np.zeros(max_slots, dtype=np.int32)
-        # hotness: allocation stamp per local page index (spill victim = min)
-        self._clock = 0
-        self._stamp: dict[int, int] = {}
-        self._owner: dict[int, tuple[int, int]] = {}   # local idx -> (slot, p)
-        self.spills = 0
+        # Page temperature: the shared touch histogram (one source of truth
+        # — spill victims here, promote/demote candidates in the migrator).
+        self.heat = temperature if temperature is not None else PageTouchHistogram()
+        self._owner: dict[tuple[int, int], tuple[int, int]] = {}
+        # (tier, pool idx) -> (slot, p): reverse page-table map, both tiers
+        self.spills = 0                # pressure-driven local->remote moves
+        self.promotions = 0            # migration: remote->local page moves
+        self.demotions = 0             # migration: local->remote (non-spill)
 
     # -- occupancy ---------------------------------------------------------
     @property
@@ -116,21 +130,18 @@ class PagedTieredCache:
         return self.n_remote
 
     # -- allocation --------------------------------------------------------
+    def owned_pages(self, tier: int) -> list[int]:
+        """Pool indices currently owned by some slot in `tier`."""
+        return [idx for (t, idx) in self._owner if t == tier]
+
     def _spill_coldest_local(self) -> int:
         """Migrate the coldest local page to the remote pool; return the
         freed local index."""
         if not self.free[REMOTE]:
             raise CacheFull("both tiers exhausted")
-        victim = min(self._stamp, key=self._stamp.get)
-        dst = self.free[REMOTE].pop()
-        for name in self.kv_names:
-            pool_l, pool_r = self.pools[f"{name}_local"], self.pools[f"{name}_remote"]
-            self.pools[f"{name}_remote"] = pool_r.at[:, dst].set(pool_l[:, victim])
-        slot, p = self._owner.pop(victim)
-        del self._stamp[victim]
-        self.table[slot, p] = dst
-        self.tier[slot, p] = REMOTE
-        self.spills += 1
+        victim = self.heat.coldest(LOCAL, self.owned_pages(LOCAL))
+        self.move_pages(LOCAL, REMOTE, [victim], _pressure=True)
+        self.free[LOCAL].remove(victim)
         return victim
 
     def alloc(self, slot: int) -> PageRef:
@@ -151,10 +162,8 @@ class PagedTieredCache:
             tier = REMOTE
         else:
             raise CacheFull("both tiers exhausted")
-        if tier == LOCAL:
-            self._clock += 1
-            self._stamp[idx] = self._clock
-            self._owner[idx] = (slot, p)
+        self._owner[(tier, idx)] = (slot, p)
+        self.heat.touch(tier, idx)           # birth touch (the sequence tail)
         self.table[slot, p] = idx
         self.tier[slot, p] = tier
         self.n_pages[slot] = p + 1
@@ -170,12 +179,89 @@ class PagedTieredCache:
         for p in range(int(self.n_pages[slot])):
             idx, tier = int(self.table[slot, p]), int(self.tier[slot, p])
             self.free[tier].append(idx)
-            if tier == LOCAL:
-                self._stamp.pop(idx, None)
-                self._owner.pop(idx, None)
+            self._owner.pop((tier, idx), None)
+            self.heat.forget(tier, idx)
         self.table[slot] = 0
         self.tier[slot] = 0
         self.n_pages[slot] = 0
+
+    # -- live migration ----------------------------------------------------
+    def move_pages(self, tier_from: int, tier_to: int, ids: list[int],
+                   _pressure: bool = False) -> int:
+        """Move owned pages between tiers without invalidating the shared
+        page table: contents are copied pool-to-pool in one batched scatter
+        per K/V buffer, the owning slots' table entries are retagged in
+        place, and the heat histogram entries travel with the pages.
+        Returns the number of pages moved.
+
+        Raises ``CacheFull`` when the destination tier lacks free pages and
+        ``KeyError`` when an id is not currently owned in ``tier_from``.
+        """
+        if tier_from == tier_to or not ids:
+            return 0
+        if len(self.free[tier_to]) < len(ids):
+            raise CacheFull(
+                f"destination tier {tier_to} has {len(self.free[tier_to])} "
+                f"free pages, need {len(ids)}")
+        owners = [self._owner[(tier_from, int(i))] for i in ids]  # KeyError if unowned
+        dsts = [self.free[tier_to].pop() for _ in ids]
+        sfx = {LOCAL: "local", REMOTE: "remote"}
+        src_idx = np.asarray(ids, np.int32)
+        dst_idx = np.asarray(dsts, np.int32)
+        for name in self.kv_names:
+            src_pool = self.pools[f"{name}_{sfx[tier_from]}"]
+            dst_pool = self.pools[f"{name}_{sfx[tier_to]}"]
+            self.pools[f"{name}_{sfx[tier_to]}"] = \
+                dst_pool.at[:, dst_idx].set(src_pool[:, src_idx])
+        for src, dst, (slot, p) in zip(ids, dsts, owners, strict=True):
+            del self._owner[(tier_from, int(src))]
+            self._owner[(tier_to, dst)] = (slot, p)
+            self.table[slot, p] = dst
+            self.tier[slot, p] = tier_to
+            self.heat.retag(tier_from, int(src), tier_to, dst)
+            self.free[tier_from].append(int(src))
+        if tier_from == LOCAL:
+            if _pressure:
+                self.spills += len(ids)
+            else:
+                self.demotions += len(ids)
+        else:
+            self.promotions += len(ids)
+        return len(ids)
+
+    # -- per-step temperature bookkeeping ---------------------------------
+    def touch_step(self, lens: np.ndarray, active: np.ndarray) -> None:
+        """Record one decode step's page accesses in the heat histogram.
+
+        Every page an active slot attends gets a read touch; the page
+        receiving the new K/V row gets a heavier write touch.  Touches are
+        issued tail-last so recency ties resolve toward the sequence tail.
+        Call once per engine step, before :meth:`write_targets`."""
+        self.heat.advance()
+        ps = self.page_size
+        for slot in np.nonzero(np.asarray(active))[0]:
+            n = min(-(-(int(lens[slot]) + 1) // ps), int(self.n_pages[slot]))
+            wr_p = min(int(lens[slot]) // ps, self.max_pages - 1)
+            for p in range(n):
+                self.heat.touch(int(self.tier[slot, p]),
+                                int(self.table[slot, p]),
+                                2.0 if p == wr_p else 1.0)
+
+    def attended_bytes(self, lens: np.ndarray, active: np.ndarray
+                       ) -> tuple[float, float]:
+        """(local_bytes, remote_bytes) one decode step reads from the KV
+        pools, per the page-table tiers (telemetry accounting)."""
+        pool = self.pools["k_local"]
+        page_bytes = (pool.shape[0] * self.page_size * pool.shape[3]
+                      * pool.shape[4] * pool.dtype.itemsize * len(self.kv_names))
+        local = remote = 0
+        for slot in np.nonzero(np.asarray(active))[0]:
+            n = min(-(-(int(lens[slot]) + 1) // self.page_size),
+                    int(self.n_pages[slot]))
+            tiers = self.tier[slot, :n]
+            remote += int((tiers == REMOTE).sum())
+            local += int((tiers == LOCAL).sum())
+        return local * page_bytes, remote * page_bytes
 
     # -- data movement -----------------------------------------------------
     def write_prompt(self, slot: int, k: jax.Array,

@@ -7,7 +7,11 @@ by *operand type*, not by model family: every 2-D tiered weight is computed
 by `SplitK_GEMM` (`kernels.ops.tiered_matmul`), tiered MoE expert stacks run
 the per-tier expert einsum (`models.layers.moe_block`), and the KV cache is
 attended by the page-table-indexed `SplitK_FlashAttn` variant — all under
-the congestion window from the plan.
+the congestion ``window`` passed per step.  The window is not a plan-time
+constant: the static plan merely seeds it, and the adaptive engine threads
+the AIMD controller's current value (`runtime.controller`) into every
+decode step.  It only paces DMA issue — outputs are bitwise-independent of
+its value.
 
 Family coverage:
 

@@ -1,0 +1,22 @@
+"""Shared serving-test oracle: per-request greedy decoding on the plain
+(batch-1) reference path.  Imported by test_serving.py and test_runtime.py
+so every engine-equivalence test compares against the same reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def reference_tokens(cfg, params, prompt, new_tokens, max_len):
+    logits, cache = M.prefill(cfg, params, {"tokens": prompt[None, :]},
+                              max_len=max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = prompt.shape[0]
+    while len(toks) < new_tokens:
+        logits, cache = M.decode_step(
+            cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+            jnp.int32(pos))
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    return toks

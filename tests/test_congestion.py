@@ -81,6 +81,45 @@ def test_optimal_host_streams_monotone_in_window():
     assert all(b <= a for a, b in zip(counts, counts[1:]))
 
 
+class _SoftKneeModel(congestion.CongestionModel):
+    """Throughput plateaus just *below* nominal bandwidth (a measured curve
+    shape the old nominal-bandwidth saturation test could never satisfy)."""
+
+    def host_throughput(self, inflight_bytes: float) -> float:
+        return min(self.hw.host.bandwidth * 0.995,
+                   super().host_throughput(inflight_bytes))
+
+
+def test_optimal_host_streams_caps_at_achievable_plateau():
+    """Regression (for/else bug): when the link never reaches 99.9% of the
+    *nominal* bandwidth, the old code silently fell through to provisioning
+    every requested stream.  The fix judges saturation against the best
+    *achievable* throughput, so the smallest stream count on the plateau
+    wins."""
+    m = _SoftKneeModel(TPU_V5E)
+    window, chunk = 4, 256 * 1024
+    n = congestion.optimal_host_streams(m, window=window, chunk_bytes=chunk,
+                                        required_streams=200)
+    # smallest s whose throughput is within 0.1% of the plateau
+    best = max(m.host_throughput(float(s) * window * chunk) for s in range(1, 257))
+    expected = next(s for s in range(1, 257)
+                    if m.host_throughput(float(s) * window * chunk) >= best * 0.999)
+    assert n == expected
+    assert n < 200, "soft-knee plateau must not over-provision to `required`"
+
+
+def test_model_source_is_pluggable_measurement():
+    """`congestion.ModelSource` exposes the analytical model through the
+    MeasurementSource protocol the adaptive runtime's controller consumes."""
+    m = congestion.CongestionModel(TPU_V5E)
+    src = congestion.ModelSource(m, n_streams=2, chunk_bytes=64 * 1024)
+    s = src.measure(3)
+    q = 2 * 3 * 64 * 1024
+    assert s.host_bw == pytest.approx(m.host_throughput(q))
+    assert s.hbm_bw == pytest.approx(m.hbm_throughput(q))
+    assert s.aggregate <= m.hw.aggregate_bw + 1e-6
+
+
 # ---------------------------------------------------------------------------
 # Multicast / read amplification
 # ---------------------------------------------------------------------------

@@ -27,7 +27,28 @@ def test_serve_driver_tiered():
         "--offload-ratio", "0.5",
     ])
     assert out["served"] == 3
-    assert out["ttft_p50"] > 0 and out["ttft_p95"] >= out["ttft_p50"]
+    assert out["ttft_p50_ms"] > 0 and out["ttft_p95_ms"] >= out["ttft_p50_ms"]
+
+
+@pytest.mark.slow
+def test_serve_driver_adaptive_writes_bench_json(tmp_path):
+    """--adaptive attaches the runtime and emits the BENCH_serving.json
+    report (tokens/s, TTFT percentiles, per-tier bandwidth, modeled
+    static-vs-adaptive)."""
+    import json
+
+    path = tmp_path / "BENCH_serving.json"
+    out = serve.main([
+        "--arch", "llama2_7b", "--smoke", "--requests", "3", "--max-batch", "2",
+        "--prompt-len", "6", "--new-tokens", "2", "--max-len", "24",
+        "--offload-ratio", "0.5", "--adaptive", "--bench-json", str(path),
+    ])
+    assert out["served"] == 3 and out["adaptive"]
+    rep = json.loads(path.read_text())
+    rt = rep["runtime"]
+    assert rt["modeled"]["adaptive_tokens_per_s"] > 0
+    assert rt["telemetry"]["bandwidth"]["remote"]["predicted"] > 0
+    assert rep["window"]["final"] >= 1
 
 
 @pytest.mark.slow

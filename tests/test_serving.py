@@ -20,6 +20,7 @@ from repro.core.hardware import GH200, TPU_V5E
 from repro.models import model as M
 from repro.serving import tiered_decode as TD
 from repro.serving.engine import Request, ServingEngine
+from serving_ref import reference_tokens as _reference_tokens
 
 KEY = jax.random.PRNGKey(0)
 
@@ -75,21 +76,6 @@ def test_engine_continuous_batching_overlap():
                            max_new_tokens=2))
     stats = eng.run()
     assert stats.served == 4
-
-
-def _reference_tokens(cfg, params, prompt, new_tokens, max_len):
-    """Per-request greedy decoding on the plain (batch-1) reference path."""
-    logits, cache = M.prefill(cfg, params, {"tokens": prompt[None, :]},
-                              max_len=max_len)
-    toks = [int(jnp.argmax(logits[0, -1]))]
-    pos = prompt.shape[0]
-    while len(toks) < new_tokens:
-        logits, cache = M.decode_step(
-            cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
-            jnp.int32(pos))
-        toks.append(int(jnp.argmax(logits[0, 0])))
-        pos += 1
-    return toks
 
 
 @pytest.mark.parametrize("ratio", [0.0, 0.5])
