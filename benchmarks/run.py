@@ -9,9 +9,12 @@ fraction, modeled TPU µs).
       --json-out BENCH_serving.json
 
 ``--json-out`` additionally writes the serving section's machine-readable
-report (static vs adaptive tokens/s, TTFT p50/p95, achieved bandwidth per
-tier) — the ``BENCH_serving.json`` artifact CI uploads so the serving perf
-trajectory is tracked across PRs.
+report (static vs adaptive vs mesh-sharded tokens/s, TTFT p50/p95,
+achieved bandwidth per tier, per-run ``mesh_shape``, per-link fetch-once
+traffic vs the multicast oracle) — the ``BENCH_serving.json`` artifact CI
+uploads so the serving perf trajectory is tracked across PRs.  The
+sharded run's device count comes from ``BENCH_MESH_DEVICES`` (default 2;
+it spawns a subprocess with a forced multi-device host platform).
 """
 from __future__ import annotations
 

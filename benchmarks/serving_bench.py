@@ -1,14 +1,27 @@
-"""Serving benchmark: static vs adaptive engine on the smoke workload.
+"""Serving benchmark: static vs adaptive vs mesh-sharded engine.
 
-Runs the end-to-end serving driver twice — once with the static plan, once
-with the adaptive runtime attached — and emits both the CSV rows the
+Runs the end-to-end serving driver three ways — the static plan, the
+adaptive runtime, and (in a subprocess with a forced multi-device host
+platform) the mesh-sharded engine — and emits both the CSV rows the
 benchmark harness prints and the machine-readable ``BENCH_serving.json``
 payload (``benchmarks.run --json-out``), so the serving perf trajectory
 (tokens/s, TTFT percentiles, achieved bandwidth per tier, static vs
-adaptive) is tracked across PRs.
+adaptive, 1-device vs N-device sharded) is tracked across PRs.
+
+Every per-run report carries a ``mesh_shape`` field; the sharded run adds
+``mesh_traffic`` (per-link fetch-once bytes vs the multicast oracle).
+The sharded row needs ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set *before* jax initializes, so it runs ``repro.launch.serve`` in a
+fresh interpreter; a failure there degrades to a stderr warning rather
+than sinking the section.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 from typing import Iterable
 
 Row = tuple[str, float, float]
@@ -19,14 +32,52 @@ ARGS = [
     "--offload-ratio", "0.5", "--page-size", "4",
 ]
 
+SHARDED_DEVICES = int(os.environ.get("BENCH_MESH_DEVICES", "2"))
+
+
+def _sharded_report(n_devices: int) -> dict | None:
+    """Run the serving driver on an n-device mesh in a subprocess.
+
+    ``n_devices <= 1`` skips the run (BENCH_MESH_DEVICES=0/1 is the
+    opt-out) — a 1-device serve is just the static row and must not be
+    labeled sharded."""
+    if n_devices <= 1:
+        return None
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} " + flags).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "bench.json")
+        cmd = [sys.executable, "-m", "repro.launch.serve", *ARGS,
+               "--mesh-devices", str(n_devices), "--bench-json", out]
+        try:
+            subprocess.run(cmd, env=env, cwd=root, check=True,
+                           capture_output=True, timeout=1200)
+            with open(out) as fh:
+                return json.load(fh)
+        except (subprocess.SubprocessError, OSError, json.JSONDecodeError) as exc:
+            stderr = getattr(exc, "stderr", b"") or b""
+            tail = stderr[-2000:].decode("utf-8", "replace") if stderr else ""
+            print(f"# serving sharded row skipped: {exc}\n{tail}",
+                  file=sys.stderr)
+            return None
+
 
 def collect() -> tuple[list[Row], dict]:
     from repro.launch.serve import main as serve_main
 
     static = serve_main(ARGS + ["--bench-json", ""])
     adaptive = serve_main(ARGS + ["--adaptive", "--bench-json", ""])
+    sharded = _sharded_report(SHARDED_DEVICES)
+    runs: list[tuple[str, dict]] = [("static", static), ("adaptive", adaptive)]
+    if sharded is not None:
+        runs.append((f"sharded_{SHARDED_DEVICES}dev", sharded))
     rows: list[Row] = []
-    for name, rep in (("static", static), ("adaptive", adaptive)):
+    for name, rep in runs:
         tps = rep["tokens_per_s"]
         us_per_tok = 1e6 / tps if tps > 0 else 0.0
         rows.append((f"serving_{name}_tokens_per_s", us_per_tok, tps))
@@ -41,7 +92,16 @@ def collect() -> tuple[list[Row], dict]:
                      bw["local"]["achieved"] / 1e9))
         rows.append(("serving_achieved_remote_bw_gbs", 0.0,
                      bw["remote"]["achieved"] / 1e9))
-    return rows, {"static": static, "adaptive": adaptive}
+    if sharded is not None and "mesh_traffic" in sharded:
+        mt = sharded["mesh_traffic"]
+        per_link = max(mt["per_link_bytes"]) if mt["per_link_bytes"] else 0.0
+        naive = mt["oracle_per_link_naive"]
+        rows.append(("serving_sharded_link_traffic_drop", 0.0,
+                     naive / per_link if per_link else 0.0))
+    report = {"static": static, "adaptive": adaptive}
+    if sharded is not None:
+        report["sharded"] = sharded
+    return rows, report
 
 
 def rows() -> Iterable[Row]:

@@ -22,11 +22,12 @@ list.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 from repro.core import congestion, multicast, planner, tiering
+from repro.core.hardware import HardwareSpec, MeshSpec, mesh_hardware
 from repro.core.ebmodel import OpProfile, WorkloadSpec, attention_op, linear_op
-from repro.core.hardware import HardwareSpec
 from repro.configs.base import ModelConfig
 from repro.models.registry import Operand, operand_registry, resolve
 
@@ -49,6 +50,38 @@ class KVPagePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """The device axis of a `TieringPlan` (paper §4.3.2 fetch-once-broadcast
+    promoted from accounting to the serving path).
+
+    The remote tier is sharded into disjoint 1/P slices, one per chip's
+    host link; every stage downstream keys off this record: the partitioner
+    rounds remote extents to P-divisible slices, `launch.sharding` places
+    them with a `PartitionSpec` on ``axis_name``, the decode path rebuilds
+    full operands through ``kernels.ops.broadcast_remote`` inside
+    ``shard_map``, and the runtime keeps one congestion window per link.
+    """
+
+    n_devices: int
+    axis_name: str
+    host_link_bw: float                       # one link, B_h (bytes/s)
+    aggregate_host_bw: float                  # what the allocator solved on
+    link_windows: tuple[congestion.WindowPlan, ...]   # one per host link
+    traffic: multicast.AmplificationReport    # fetch-once vs naive oracle
+
+    @property
+    def per_link_bytes_multicast(self) -> float:
+        """Modeled bytes one chip's host link carries per full read of the
+        offloaded weights on the fetch-once path."""
+        return self.traffic.traffic_multicast / self.n_devices
+
+    @property
+    def per_link_bytes_naive(self) -> float:
+        """Same read with naive replication: every chip pulls everything."""
+        return self.traffic.traffic_no_multicast / self.n_devices
+
+
+@dataclasses.dataclass(frozen=True)
 class TieringPlan:
     global_ratio: float
     op_ratios: dict[str, float]            # op name -> ratio
@@ -63,6 +96,7 @@ class TieringPlan:
     kv_pages: KVPagePlan | None = None     # page budget realizing kv_ratio
     registry: tuple[Operand, ...] = ()     # operand registry (models.registry)
     prefill_op_ratios: dict[str, float] | None = None  # prefill-phase solve
+    mesh: MeshPlan | None = None           # device axis (None = single chip)
 
     def partition(self, params: dict[str, Any], *, align: int = 1,
                   place_remote: bool = False) -> dict[str, Any]:
@@ -83,6 +117,9 @@ class TieringPlan:
         streams the same remote partitions (see ``prefill_op_ratios`` for
         the prefill-phase accounting solve).  With ``place_remote`` the
         remote tier is pinned to host memory on backends that support it.
+        Under a mesh plan every remote extent is additionally rounded to a
+        multiple of ``mesh.n_devices`` so the host-resident shard splits
+        into equal 1/P slices, one per host link.
         """
         out = _copy_tree(params)
         for od in self.registry:
@@ -91,6 +128,8 @@ class TieringPlan:
                 continue
             leaf = resolve(params, od.path)
             align_eff = od.align if od.align is not None else align
+            if self.mesh is not None and self.mesh.n_devices > 1:
+                align_eff = math.lcm(align_eff, self.mesh.n_devices)
             _, n_remote = tiering.split_sizes(leaf.shape[od.axis], ratio, align_eff)
             if n_remote == 0:
                 continue
@@ -235,9 +274,21 @@ def plan(
     pod_chips: int = 1,
     dma_chunk_bytes: int = 512 * 1024,
     kv_page_size: int = 16,
+    mesh: MeshSpec | None = None,
 ) -> TieringPlan:
     """Full DAK planning pass. Either give an HBM budget (paper Fig. 10 mode)
-    or pin the global ratio directly (paper Fig. 8/9 sweep mode)."""
+    or pin the global ratio directly (paper Fig. 8/9 sweep mode).
+
+    With a ``mesh`` the plan gains its device axis: the greedy allocator
+    solves against the *aggregate* of the mesh's P host links
+    (`hardware.mesh_hardware` — each chip pulls a disjoint 1/P slice of
+    every host-resident shard, rebuilt over ICI), the congestion window is
+    solved once per link, and ``plan.mesh`` carries the fetch-once traffic
+    oracle the serving engine accounts against.  ``hw`` stays the per-chip
+    spec; per-chip HBM is unchanged (local partitions replicate), so the
+    HBM-budget mode still prices a single chip's budget.
+    """
+    n_dev = mesh.n_devices if mesh is not None else 1
     ops = enumerate_ops(cfg, wl)
     weights = cfg.param_count() * wl.dtype_bytes
     kv = kv_cache_bytes(cfg, wl)
@@ -245,18 +296,38 @@ def plan(
     if global_ratio is None:
         budget = hbm_budget_bytes if hbm_budget_bytes is not None else hw.hbm.capacity
         global_ratio = planner.global_offload_ratio(footprint, budget * pod_chips)
-    sol = planner.solve(ops, global_ratio, hw)
+    hw_solve = mesh_hardware(hw, n_dev) if n_dev > 1 else hw
+    sol = planner.solve(ops, global_ratio, hw_solve)
     op_ratios = {op.name: r for op, r in zip(ops, sol.ratios, strict=True)}
 
+    # The congestion window paces one chip's host link, so it is solved on
+    # the per-link model whatever the mesh size; a mesh simply gets one
+    # (structurally independent) window per link.
     cong = congestion.CongestionModel(hw)
-    window = congestion.optimal_window(cong, n_streams=max(1, pod_chips), chunk_bytes=dma_chunk_bytes)
+    window = congestion.optimal_window(
+        cong, n_streams=max(1, pod_chips), chunk_bytes=dma_chunk_bytes)
     host_bytes = sum(op.bytes * r for op, r in zip(ops, sol.ratios, strict=True))
     bcast = multicast.plan_broadcast(
         host_bytes=host_bytes,
-        group_size=pod_chips,
+        group_size=n_dev if n_dev > 1 else pod_chips,
         pcie_bw=hw.host.bandwidth,
         ici_bw_per_chip=hw.ici_link_bw * max(1, hw.ici_links) or hw.host.bandwidth,
     )
+    mesh_plan: MeshPlan | None = None
+    if mesh is not None:
+        # Links are identical in the analytical model: one single-stream
+        # window solve covers them all (the runtime still adapts each link
+        # independently from its own seed).
+        link_window = congestion.optimal_window(
+            cong, n_streams=1, chunk_bytes=dma_chunk_bytes)
+        mesh_plan = MeshPlan(
+            n_devices=n_dev,
+            axis_name=mesh.axis_name,
+            host_link_bw=hw.host.bandwidth,
+            aggregate_host_bw=hw_solve.host.bandwidth,
+            link_windows=(link_window,) * n_dev,
+            traffic=multicast.sharded_fetch_report(host_bytes, n_dev),
+        )
     total_c = sum(op.bytes for op in ops)
     kv_ratio = op_ratios.get("attention", 0.0)
     registry = operand_registry(cfg)
@@ -268,7 +339,7 @@ def plan(
     prefill_op_ratios: dict[str, float] | None = None
     if wl.phase == "decode" and cfg.has_decoder:
         ops_pre = enumerate_ops(cfg, dataclasses.replace(wl, phase="prefill"))
-        sol_pre = planner.solve(ops_pre, global_ratio, hw)
+        sol_pre = planner.solve(ops_pre, global_ratio, hw_solve)
         prefill_op_ratios = {
             op.name: r for op, r in zip(ops_pre, sol_pre.ratios, strict=True)}
 
@@ -288,4 +359,5 @@ def plan(
         kv_pages=kv_page_plan(cfg, wl, kv_ratio, page_size=kv_page_size),
         registry=registry,
         prefill_op_ratios=prefill_op_ratios,
+        mesh=mesh_plan,
     )

@@ -88,3 +88,60 @@ def optimal_memory_bound_ratio(hw: HardwareSpec) -> float:
     """Paper §4.2.1: memory-bound EB peaks at B_h / (B_h + B_g)."""
     bh, bg = hw.host.bandwidth, hw.hbm.bandwidth
     return bh / (bh + bg)
+
+
+# --- mesh-level (multi-chip) views -----------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """The serving mesh as the planner sees it: P chips, each with its own
+    host link, cooperating on one replica (paper §4.3.2 / DESIGN.md §2 —
+    the host-resident partition is sharded 1/P per chip and rebuilt over
+    ICI, so each offloaded byte crosses exactly one host link)."""
+
+    n_devices: int = 1
+    axis_name: str = "model"       # mesh axis carrying the remote-tier shards
+
+
+def mesh_host_bandwidth(hw: HardwareSpec, n_devices: int) -> float:
+    """Aggregate host-stream bandwidth of the mesh's P links under
+    fetch-once-broadcast — NOT one link's physical rate.
+
+    Each chip pulls 1/P of the host partition over its own link while the
+    ring all-gather moves (P-1)/P of it over ICI; the streams pipeline, so
+    the full partition arrives at every chip at
+    ``host_bytes / max(t_pcie, t_ici)`` = ``min(P·B_h, B_ici·P/(P-1))``.
+    This is what the allocator solves on (`mesh_hardware`); per-link
+    pacing (AIMD limits, window solves) must keep using
+    ``hw.host.bandwidth``.  With one chip (or no ICI figure) this
+    degenerates to the plain link bandwidth.
+    """
+    p = max(1, n_devices)
+    if p == 1:
+        return hw.host.bandwidth
+    agg = p * hw.host.bandwidth
+    ici = hw.ici_link_bw * max(1, hw.ici_links)
+    if ici > 0:
+        agg = min(agg, ici * p / (p - 1))
+    return agg
+
+
+def mesh_hardware(hw: HardwareSpec, n_devices: int) -> HardwareSpec:
+    """The aggregate-of-P-host-links view the greedy allocator solves on.
+
+    Per-chip compute and HBM are unchanged (weights' local partitions and
+    the KV page tables replicate); only the *remote* tier widens — P links
+    pull disjoint 1/P shards in parallel, so the effective host bandwidth
+    is :func:`mesh_host_bandwidth` and the host capacity aggregates.
+    """
+    p = max(1, n_devices)
+    if p == 1:
+        return hw
+    return dataclasses.replace(
+        hw,
+        name=f"{hw.name}_x{p}",
+        host=TierSpec(
+            name=hw.host.name,
+            bandwidth=mesh_host_bandwidth(hw, p),
+            capacity=hw.host.capacity * p,
+        ),
+    )

@@ -69,6 +69,28 @@ def gemm_read_amplification(
     )
 
 
+def sharded_fetch_report(
+    host_bytes: float,
+    n_devices: int,
+    overhead: float = GRANULARITY_OVERHEAD,
+) -> AmplificationReport:
+    """Fetch-once-broadcast of a host partition to `n_devices` chips, as
+    read-amplification accounting (the pod-level instance of
+    :func:`gemm_read_amplification`).
+
+    Each chip is one consumer of the full host partition (one column-tile
+    per device) and all P chips form one broadcast group, so the naive
+    path crosses the host links ``P·host_bytes`` total (every chip pulls
+    everything over its own link) while the multicast path crosses them
+    ``host_bytes`` total (disjoint 1/P slices, rebuilt over ICI).  Divide
+    by ``n_devices`` for the per-link figures the serving engine accounts
+    (`ServingEngine.mesh_traffic_report`).
+    """
+    return gemm_read_amplification(
+        int(round(host_bytes)), n=max(1, n_devices), tile_n=1,
+        broadcast_group=max(1, n_devices), overhead=overhead)
+
+
 @dataclasses.dataclass(frozen=True)
 class BroadcastPlan:
     """Pod-level fetch-once-broadcast of the host partition (TPU adaptation)."""

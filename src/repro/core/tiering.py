@@ -36,18 +36,29 @@ def split_sizes(dim: int, ratio: float, align: int = 1) -> tuple[int, int]:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class TieredArray:
-    """An operand partitioned across (local HBM, remote host) tiers."""
+    """An operand partitioned across (local HBM, remote host) tiers.
+
+    ``mesh_axes`` marks a *mesh-sharded* remote tier: the host partition is
+    laid out as disjoint 1/P slices along `axis`, one per device of the
+    named mesh axis (each chip's slice is what its own host link streams —
+    paper §4.3.2).  A sharded operand must be rebuilt by the fetch-once
+    broadcast (`kernels.ops.broadcast_remote` inside ``shard_map``) before
+    the tier-aware compute ops consume it; ``mesh_axes is None`` (the
+    default, and the state after a fetch) means the remote tier is whole.
+    """
 
     local: jax.Array            # rows [0, split) along `axis`
     remote: jax.Array           # rows [split, dim) along `axis`
     axis: int = 0
+    mesh_axes: str | None = None   # mesh axis sharding `remote` (None = whole)
 
     def tree_flatten(self):
-        return (self.local, self.remote), (self.axis,)
+        return (self.local, self.remote), (self.axis, self.mesh_axes)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], axis=aux[0])
+        return cls(children[0], children[1], axis=aux[0],
+                   mesh_axes=aux[1] if len(aux) > 1 else None)
 
     # -- convenience ------------------------------------------------------
     @property

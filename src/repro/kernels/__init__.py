@@ -3,10 +3,12 @@ flash-prefill attention."""
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.ops import (
     broadcast_remote,
+    mesh_fetch_params,
     paged_decode_attention,
     tiered_decode_attention,
     tiered_matmul,
 )
 
-__all__ = ["broadcast_remote", "flash_prefill", "paged_decode_attention",
-           "tiered_decode_attention", "tiered_matmul"]
+__all__ = ["broadcast_remote", "flash_prefill", "mesh_fetch_params",
+           "paged_decode_attention", "tiered_decode_attention",
+           "tiered_matmul"]

@@ -15,7 +15,10 @@ only schedules DMA issue; results are bitwise-independent of it.
 `broadcast_remote` implements pod-level fetch-once-broadcast (the TMA
 multicast analogue, DESIGN.md §2): the host partition is sharded across
 chips, each chip pulls a disjoint slice over its own host link, and slices
-are exchanged over ICI via all-gather.
+are exchanged over ICI via all-gather.  It is the fetch stage of mesh
+serving — `mesh_fetch_params` applies it to every sharded operand of a
+params tree in one ``shard_map``, called each step by
+`serving.tiered_decode.fetch_remote_shards`.
 """
 from __future__ import annotations
 
@@ -132,13 +135,71 @@ def paged_decode_attention(
         interpret=_interpret_default() if interpret is None else interpret)
 
 
-def broadcast_remote(w: TieredArray, axis_name: str) -> jax.Array:
+def broadcast_remote(w: TieredArray, axis_name: str) -> TieredArray:
     """Pod-level fetch-once-broadcast of the host partition (inside shard_map).
 
     The remote partition arrives sharded along `axis_name` (each chip pulled
     a disjoint slice over its own host link); one ICI all-gather rebuilds the
     full host partition on every chip — each byte crossed the host link
-    exactly once (read-amplification 1×, paper §4.3.2).
+    exactly once (read-amplification 1×, paper §4.3.2).  Returns the operand
+    with its remote tier whole (``mesh_axes=None``) so the tier-aware
+    compute ops (`tiered_matmul`, the paged attention kernels) consume it
+    exactly as on a single chip; ``.materialize()`` the result if a plain
+    concatenated array is wanted.
+
+    This is the serving path's fetch stage: `mesh_fetch_params` calls it
+    once per sharded operand per engine step (`serving.tiered_decode`).
     """
     gathered = jax.lax.all_gather(w.remote, axis_name, axis=w.axis, tiled=True)
-    return jnp.concatenate([w.local, gathered], axis=w.axis)
+    return TieredArray(w.local, gathered, axis=w.axis)
+
+
+def mesh_fetch_params(params, mesh, axis_name: str):
+    """Fetch-once broadcast of every mesh-sharded remote partition in a
+    params tree (one ``shard_map``, one ICI all-gather per operand).
+
+    Leaves whose `TieredArray.mesh_axes` names `axis_name` hold 1/P of
+    their host partition per device; this rebuilds each of them via
+    `broadcast_remote` and returns a tree of whole-remote operands that
+    the single-chip decode/prefill paths consume unchanged.  Trees with no
+    sharded leaf (offload 0, or no mesh) are returned as-is.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    leaves, treedef = jax.tree_util.tree_flatten(
+        params, is_leaf=lambda x: isinstance(x, TieredArray))
+    idx = [i for i, leaf in enumerate(leaves)
+           if isinstance(leaf, TieredArray) and leaf.mesh_axes == axis_name]
+    if not idx:
+        return params
+    remotes = {str(i): leaves[i].remote for i in idx}
+    axes = {str(i): leaves[i].axis for i in idx}
+
+    def shard_spec(leaf: TieredArray) -> P:
+        spec = [None] * leaf.remote.ndim
+        spec[leaf.axis % leaf.remote.ndim] = axis_name
+        return P(*spec)
+
+    def fetch(rem):
+        # Only the host tier crosses the mesh here — the HBM-resident local
+        # partitions stay outside the shard_map (a zero-extent stand-in
+        # satisfies the operand signature without shipping their bytes).
+        out = {}
+        for k, r in rem.items():
+            ax = axes[k] % r.ndim
+            stub = jax.lax.slice_in_dim(r, 0, 0, axis=ax)
+            out[k] = broadcast_remote(
+                TieredArray(stub, r, axis=axes[k]), axis_name).remote
+        return out
+
+    gathered = shard_map(
+        fetch, mesh=mesh,
+        in_specs=({str(i): shard_spec(leaves[i]) for i in idx},),
+        out_specs={k: P() for k in remotes},
+        check_rep=False,
+    )(remotes)
+    for i in idx:
+        leaf = leaves[i]
+        leaves[i] = TieredArray(leaf.local, gathered[str(i)], axis=leaf.axis)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

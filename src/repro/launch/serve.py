@@ -37,6 +37,7 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
         "arch": args.arch,
         "smoke": bool(args.smoke),
         "adaptive": bool(args.adaptive),
+        "mesh_shape": engine.mesh_shape,
         "requests": args.requests,
         "served": stats.served,
         "global_ratio": engine.plan.global_ratio,
@@ -57,6 +58,8 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
         "window": {"static": engine.plan.window.n_inflight,
                    "final": stats.final_window},
     }
+    if engine.mesh is not None:
+        report["mesh_traffic"] = engine.mesh_traffic_report()
     if engine.runtime is not None:
         report["runtime"] = engine.runtime.report()
     return report
@@ -81,6 +84,12 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--adaptive", action="store_true",
                     help="attach the adaptive runtime (AIMD window control, "
                          "phase-aware re-planning, live page migration)")
+    ap.add_argument("--mesh-devices", type=int, default=1, metavar="P",
+                    help="serve one replica across P chips, each with its own "
+                         "host link: the remote tier shards 1/P per link and "
+                         "every step rebuilds it fetch-once over ICI (on CPU, "
+                         "force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=P)")
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark report here "
                          "(default BENCH_serving.json with --adaptive)")
@@ -90,17 +99,33 @@ def main(argv: list[str] | None = None) -> dict:
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = None
+    if args.mesh_devices > 1:
+        if jax.device_count() < args.mesh_devices:
+            raise SystemExit(
+                f"--mesh-devices {args.mesh_devices} needs that many devices "
+                f"(have {jax.device_count()}); on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh_devices}")
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:args.mesh_devices]), ("model",))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
         global_offload_ratio=None if args.hbm_gb is not None else args.offload_ratio,
         use_kernels=not args.no_kernels, page_size=args.page_size,
-        adaptive=args.adaptive)
+        adaptive=args.adaptive, mesh=mesh)
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
           f"window={engine.plan.window.n_inflight} tiered={engine.tiered} "
-          f"adaptive={args.adaptive}")
+          f"adaptive={args.adaptive} mesh={engine.mesh_shape}")
+    if engine.plan.mesh is not None:
+        mp = engine.plan.mesh
+        print(f"mesh: {mp.n_devices} host links x "
+              f"{mp.host_link_bw / 1e9:.0f} GB/s -> aggregate "
+              f"{mp.aggregate_host_bw / 1e9:.0f} GB/s | per-link fetch-once "
+              f"{mp.per_link_bytes_multicast / 1e6:.1f} MB vs naive "
+              f"{mp.per_link_bytes_naive / 1e6:.1f} MB")
     if args.hbm_gb is not None:
         print(f"budget: {args.hbm_gb:.1f} GB HBM vs "
               f"{engine.plan.footprint_bytes / 1e9:.1f} GB footprint")

@@ -7,6 +7,18 @@ any (arch × shape × mesh) combination lowers to a legal sharding — e.g.
 GQA caches whose kv-head count is smaller than the model axis fall back to
 sequence(split-K)-sharded KV, which is exactly the paper's SplitK layout
 promoted to the pod level.
+
+This module is the *shared* placement policy — training and serving both
+draw from it.  The serving-side entry points (`tiered_remote_spec`,
+`shard_tiered_params`, `remote_pool_spec`) realize the mesh-aware tiered
+plan (`core.engine.MeshPlan`): the host-resident partition of every
+`TieredArray` is laid out as disjoint 1/P slices along its split axis
+(one slice per chip's host link — paper §4.3.2 fetch-once-broadcast),
+local partitions and page tables replicate, and remote KV pools shard on
+the in-page sequence axis — the same split-K fallback the training cache
+specs use.  Divisibility guards apply here too: an operand whose remote
+extent does not divide the mesh falls back to a replicated host partition
+(naive fetch; the traffic accounting prices it accordingly).
 """
 from __future__ import annotations
 
@@ -16,6 +28,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.tiering import TieredArray
 from repro.launch.mesh import axis_size, data_axes
 
 # param-name classes
@@ -156,3 +169,55 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# Serving-side tiered placement (the mesh-aware plan's realization).
+# --------------------------------------------------------------------------
+def tiered_remote_spec(leaf: TieredArray, mesh: Mesh, axis_name: str) -> P:
+    """PartitionSpec of a `TieredArray`'s host partition: 1/P slices along
+    the split axis when the remote extent divides the mesh axis, else
+    replicated (the divisibility fallback — naive fetch for that operand).
+    """
+    dim = leaf.remote.shape[leaf.axis]
+    if dim == 0 or dim % mesh.shape[axis_name] != 0:
+        return P()
+    spec: list[Any] = [None] * leaf.remote.ndim
+    spec[leaf.axis % leaf.remote.ndim] = axis_name
+    return P(*spec)
+
+
+def shard_tiered_params(params: Any, mesh: Mesh, axis_name: str) -> Any:
+    """Place a partitioned params tree on the serving mesh.
+
+    Local partitions and plain leaves replicate (every chip computes the
+    full batch); each remote partition is committed as disjoint 1/P slices
+    along its split axis — the slice one chip's own host link streams —
+    and tagged with ``mesh_axes`` so the decode path knows to rebuild it
+    through the fetch-once broadcast (`kernels.ops.mesh_fetch_params`).
+    """
+    repl = NamedSharding(mesh, P())
+
+    def place(leaf):
+        if isinstance(leaf, TieredArray):
+            spec = tiered_remote_spec(leaf, mesh, axis_name)
+            return TieredArray(
+                local=jax.device_put(leaf.local, repl),
+                remote=jax.device_put(leaf.remote, NamedSharding(mesh, spec)),
+                axis=leaf.axis,
+                mesh_axes=axis_name if spec != P() else None)
+        return jax.device_put(leaf, repl)
+
+    return jax.tree.map(place, params,
+                        is_leaf=lambda x: isinstance(x, TieredArray))
+
+
+def remote_pool_spec(pool_shape: tuple[int, ...], mesh: Mesh,
+                     axis_name: str) -> P:
+    """Spec for a remote KV page pool ``[L, pages+1, page_size, Kh, hd]``:
+    sharded on the in-page sequence axis (each chip holds 1/P of every
+    remote page — the split-K fallback of :func:`cache_specs` carried to
+    the paged layout), replicated when the page size does not divide."""
+    if len(pool_shape) < 3 or pool_shape[2] % mesh.shape[axis_name] != 0:
+        return P()
+    return P(*([None, None, axis_name] + [None] * (len(pool_shape) - 3)))

@@ -236,13 +236,22 @@ class RuntimeController:
         model = congestion.CongestionModel(hw)
         self.source = source or congestion.ModelSource(
             model, plan.window.n_streams, plan.window.chunk_bytes)
-        self.controller = AIMDController(
-            window=plan.window.n_inflight,
-            host_bw_limit=hw.host.bandwidth,
-            rtt=model.rtt,
-            n_streams=plan.window.n_streams,
-            chunk_bytes=plan.window.chunk_bytes,
-            max_step=window_budget)
+        # One congestion window per host link, keyed by mesh-axis index: a
+        # mesh plan carries P per-link window seeds, a single-chip plan one.
+        # Each link runs its own AIMD loop — links congest independently on
+        # real hardware (per-chip PCIe) even though the analytical CPU model
+        # is symmetric.
+        seeds = ([w.n_inflight for w in plan.mesh.link_windows]
+                 if plan.mesh is not None else [plan.window.n_inflight])
+        self.link_controllers = [
+            AIMDController(
+                window=seed,
+                host_bw_limit=hw.host.bandwidth,
+                rtt=model.rtt,
+                n_streams=plan.window.n_streams,
+                chunk_bytes=plan.window.chunk_bytes,
+                max_step=window_budget)
+            for seed in seeds]
         self.replanner = replan_mod.Replanner(
             cfg, hw, plan,
             policy=replan_mod.ReplanPolicy(
@@ -253,11 +262,18 @@ class RuntimeController:
         self.align = align
         self._static_window = plan.window.n_inflight
         self.stats = RuntimeStats(
-            window_min=self.controller.window, window_max=self.controller.window)
+            window_min=self.window, window_max=self.window)
 
     @property
     def window(self) -> int:
-        return self.controller.window
+        """The window threaded into the kernels: every chip paces its own
+        link, so the step issues at the slowest link's window."""
+        return min(c.window for c in self.link_controllers)
+
+    @property
+    def windows(self) -> tuple[int, ...]:
+        """Per-host-link congestion windows (one entry per mesh link)."""
+        return tuple(c.window for c in self.link_controllers)
 
     # -- modeled throughput (the analytical harness) -----------------------
     def _modeled_step_time(self, sample: StepSample,
@@ -294,9 +310,18 @@ class RuntimeController:
             sample, self.plan.op_ratios)
         self.stats.modeled_tokens += sample.tokens
 
-        self.controller.update(self.source.measure(self.controller.window))
-        self.stats.window_min = min(self.stats.window_min, self.controller.window)
-        self.stats.window_max = max(self.stats.window_max, self.controller.window)
+        # Each link's AIMD loop gets its own observation when the source
+        # can resolve links (TelemetrySource on a mesh); single-link
+        # sources feed every controller the same sample — correct there,
+        # since off-mesh the aggregate *is* the one link.
+        measure_link = getattr(self.source, "measure_link", None)
+        for i, link in enumerate(self.link_controllers):
+            if measure_link is not None and len(self.link_controllers) > 1:
+                link.update(measure_link(i, link.window))
+            else:
+                link.update(self.source.measure(link.window))
+        self.stats.window_min = min(self.stats.window_min, self.window)
+        self.stats.window_max = max(self.stats.window_max, self.window)
 
         if cache is not None:
             rep = self.migrator.step(cache)
@@ -317,10 +342,11 @@ class RuntimeController:
         return {
             "window": {
                 "static": self._static_window,
-                "final": self.controller.window,
+                "final": self.window,
                 "min": self.stats.window_min,
                 "max": self.stats.window_max,
-                "converged": self.controller.converged,
+                "converged": all(c.converged for c in self.link_controllers),
+                "per_link": list(self.windows),
             },
             "replans": self.stats.replans,
             "migration": {"promoted": self.stats.promoted_pages,

@@ -29,6 +29,7 @@ from typing import Any
 
 from repro.configs.base import ModelConfig
 from repro.core import engine as offload_engine
+from repro.core import hardware as hardware_mod
 from repro.core import tiering
 from repro.core.engine import _copy_tree, _set_path
 from repro.core.ebmodel import WorkloadSpec
@@ -93,9 +94,16 @@ class Replanner:
         wl = self.observed_workload(telemetry)
         page_size = (self.plan.kv_pages.page_size
                      if self.plan.kv_pages is not None else 16)
+        # The device axis survives a re-plan: re-solve on the same mesh so
+        # the new ratios still shard into 1/P host-link slices.
+        mesh_spec = None
+        if self.plan.mesh is not None:
+            mesh_spec = hardware_mod.MeshSpec(
+                n_devices=self.plan.mesh.n_devices,
+                axis_name=self.plan.mesh.axis_name)
         new = offload_engine.plan(
             self.cfg, wl, self.hw, global_ratio=self.plan.global_ratio,
-            kv_page_size=page_size)
+            kv_page_size=page_size, mesh=mesh_spec)
         self.planned_mix = telemetry.prefill_fraction
         self.plan = new
         self.replans += 1
@@ -125,12 +133,16 @@ def repartition(
     """
     out = _copy_tree(params)
     changed: list[str] = []
+    mesh_div = (new_plan.mesh.n_devices
+                if new_plan.mesh is not None and new_plan.mesh.n_devices > 1
+                else 1)
     for od in new_plan.registry:
         new_r = new_plan.op_ratios.get(od.op, 0.0)
         leaf = resolve(params, od.path)
         is_tiered = isinstance(leaf, tiering.TieredArray)
         dim = leaf.shape[od.axis]
         align_eff = od.align if od.align is not None else align
+        align_eff = math.lcm(align_eff, mesh_div)
         _, tgt_remote = tiering.split_sizes(dim, max(0.0, new_r), align_eff)
         cur_remote = leaf.remote.shape[od.axis] if is_tiered else 0
         if tgt_remote == cur_remote:

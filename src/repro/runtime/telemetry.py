@@ -38,8 +38,11 @@ class StepSample:
     active_slots: int
     mean_kv_len: float                 # mean kv length over active slots
     local_bytes: float                 # bytes streamed from the HBM tier
-    remote_bytes: float                # bytes streamed over the host link
+    remote_bytes: float                # bytes crossing host links (all links)
     window: int                        # in-flight DMA window used this step
+    remote_bytes_per_link: tuple[float, ...] | None = None
+    # per-host-link breakdown of remote_bytes under a serving mesh (one
+    # entry per chip's link, summing to remote_bytes); None = single link
 
     @property
     def tokens(self) -> int:
@@ -48,6 +51,13 @@ class StepSample:
     @property
     def prefill_fraction(self) -> float:
         return self.prefill_tokens / self.tokens if self.tokens else 0.0
+
+    @property
+    def link_bytes(self) -> tuple[float, ...]:
+        """remote_bytes resolved per link (single-link when no breakdown)."""
+        if self.remote_bytes_per_link is not None:
+            return self.remote_bytes_per_link
+        return (self.remote_bytes,)
 
 
 def _ema(prev: float | None, value: float, alpha: float) -> float:
@@ -79,6 +89,7 @@ class Telemetry:
         self.total_remote_bytes = 0.0
         self._ema_local_bw: float | None = None
         self._ema_remote_bw: float | None = None
+        self._ema_link_bw: list[float | None] = []   # per host link (mesh)
         self._ema_mix: float | None = None
         self._ema_queue: float | None = None
         self._ema_kv_len: float | None = None
@@ -94,6 +105,11 @@ class Telemetry:
         dt = max(sample.duration_s, 1e-12)
         self._ema_local_bw = _ema(self._ema_local_bw, sample.local_bytes / dt, self.alpha)
         self._ema_remote_bw = _ema(self._ema_remote_bw, sample.remote_bytes / dt, self.alpha)
+        links = sample.link_bytes
+        if len(self._ema_link_bw) < len(links):
+            self._ema_link_bw += [None] * (len(links) - len(self._ema_link_bw))
+        for i, b in enumerate(links):
+            self._ema_link_bw[i] = _ema(self._ema_link_bw[i], b / dt, self.alpha)
         self._ema_mix = _ema(self._ema_mix, sample.prefill_fraction, self.alpha)
         self._ema_queue = _ema(self._ema_queue, float(sample.queue_depth), self.alpha)
         self._ema_kv_len = _ema(self._ema_kv_len, sample.mean_kv_len, self.alpha)
@@ -107,6 +123,12 @@ class Telemetry:
     @property
     def achieved_remote_bw(self) -> float:
         return self._ema_remote_bw or 0.0
+
+    @property
+    def achieved_link_bw(self) -> list[float]:
+        """Per-host-link achieved-bandwidth EMAs (one entry per mesh link;
+        a single entry — equal to ``achieved_remote_bw`` — off-mesh)."""
+        return [b or 0.0 for b in self._ema_link_bw]
 
     @property
     def prefill_fraction(self) -> float:
@@ -141,6 +163,7 @@ class Telemetry:
                           "predicted": self.predicted_local_bw},
                 "remote": {"achieved": self.achieved_remote_bw,
                            "predicted": self.predicted_remote_bw},
+                "per_link": self.achieved_link_bw,
             },
             "bytes": {"local": self.total_local_bytes,
                       "remote": self.total_remote_bytes},
@@ -166,6 +189,20 @@ class TelemetrySource:
         from repro.core.congestion import BandwidthSample
 
         return BandwidthSample(host_bw=self.telemetry.achieved_remote_bw,
+                               hbm_bw=self.telemetry.achieved_local_bw)
+
+    def measure_link(self, link: int, window: int):
+        """Per-host-link observation for the mesh's per-link AIMD loops:
+        link `link`'s achieved-bandwidth EMA, not the all-links sum —
+        ``measure()`` reports the aggregate, which against a single link's
+        ``host_bw_limit`` would read permanently saturated.  Falls back to
+        the aggregate while no per-link samples have arrived."""
+        from repro.core.congestion import BandwidthSample
+
+        per_link = self.telemetry.achieved_link_bw
+        host = (per_link[link] if link < len(per_link)
+                else self.telemetry.achieved_remote_bw)
+        return BandwidthSample(host_bw=host,
                                hbm_bw=self.telemetry.achieved_local_bw)
 
 
@@ -266,3 +303,28 @@ def weight_tier_bytes(params) -> tuple[float, float]:
             params, is_leaf=lambda x: hasattr(x, "materialize")):
         visit(leaf)
     return local, remote
+
+
+def weight_link_bytes(params, n_links: int) -> list[float]:
+    """Per-host-link bytes for one full read of a params tree's remote
+    partitions (the serving mesh's traffic accounting).
+
+    A mesh-sharded remote partition (`TieredArray.mesh_axes` set) is pulled
+    as disjoint 1/P slices — each link carries its slice once (fetch-once
+    broadcast); a whole remote partition (single link, or the divisibility
+    fallback) is pulled entirely by every link (naive replication).  With
+    one link this reduces to ``weight_tier_bytes``'s remote figure.
+    """
+    import jax
+
+    n = max(1, n_links)
+    links = [0.0] * n
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: hasattr(x, "materialize")):
+        if not (hasattr(leaf, "local") and hasattr(leaf, "remote")):
+            continue
+        b = leaf.remote.size * leaf.remote.dtype.itemsize
+        share = b / n if getattr(leaf, "mesh_axes", None) is not None else b
+        for i in range(n):
+            links[i] += share
+    return links

@@ -32,6 +32,19 @@ lets the bounded-budget migrator re-place KV pages between tiers, and —
 when the observed workload mix drifts — swaps in incrementally
 repartitioned params from the phase-aware re-planner.  With every runtime
 budget at zero the adaptive engine is bitwise-identical to the static one.
+
+With a ``mesh`` the engine serves one replica across P chips, each with
+its own host link (paper §4.3.2 fetch-once-broadcast as a serving mode):
+the plan is solved on the aggregate of the P links, every host-resident
+weight partition is committed as disjoint 1/P slices
+(`launch.sharding.shard_tiered_params`), the paged KV cache shards its
+remote pools the same way, and each step rebuilds the full operands
+through one `kernels.ops.broadcast_remote` pass inside ``shard_map`` —
+so each offloaded byte crosses one host link per step and the per-link
+traffic drops ~1/P vs naive replication, while tokens stay
+bitwise-identical to the single-chip engine.  Telemetry and the adaptive
+runtime account and pace each link separately (per-link congestion
+windows).
 """
 from __future__ import annotations
 
@@ -47,11 +60,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import engine as offload_engine
+from repro.core import multicast
 from repro.core.ebmodel import WorkloadSpec
-from repro.core.hardware import HardwareSpec, TPU_V5E
+from repro.core.hardware import HardwareSpec, MeshSpec, TPU_V5E
 from repro.models import model as M
 from repro.runtime.controller import RuntimeController
-from repro.runtime.telemetry import StepSample, weight_tier_bytes
+from repro.runtime.telemetry import (
+    StepSample,
+    weight_link_bytes,
+    weight_tier_bytes,
+)
 from repro.serving import tiered_decode as TD
 from repro.serving.paged_cache import PagedTieredCache
 
@@ -120,16 +138,23 @@ class ServingEngine:
         page_size: int = 8,
         adaptive: bool = False,
         runtime: RuntimeController | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        mesh_axis: str | None = None,
     ):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.page_size = page_size
         self.use_kernels = use_kernels and cfg.family in TIERED_FAMILIES
+        self.mesh = mesh
+        self.mesh_axis = (mesh_axis or mesh.axis_names[-1]) if mesh is not None else None
+        self.n_links = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
         wl = WorkloadSpec(batch=max_batch, seq_len=max_len, phase="decode")
         self.plan = offload_engine.plan(
             cfg, wl, hw, hbm_budget_bytes=hbm_budget_bytes,
-            global_ratio=global_offload_ratio, kv_page_size=page_size)
+            global_ratio=global_offload_ratio, kv_page_size=page_size,
+            mesh=(MeshSpec(n_devices=self.n_links, axis_name=self.mesh_axis)
+                  if mesh is not None else None))
         self.window = self.plan.window.n_inflight
         self._align = 32 if cfg.d_model < 1024 else 128
         # One partition pass for every family (the unified API); at ratio 0
@@ -139,6 +164,12 @@ class ServingEngine:
             self.params = self.plan.partition(params, align=self._align)
         else:
             self.params = params
+        if mesh is not None:
+            # Commit the tree to the serving mesh: remote partitions as
+            # disjoint 1/P host-link slices, everything else replicated.
+            from repro.launch.sharding import shard_tiered_params
+
+            self.params = shard_tiered_params(self.params, mesh, self.mesh_axis)
         # Adaptive runtime: seeded from the static plan; pass `runtime` to
         # override budgets/measurement source (tests use the zero-budget
         # no-op configuration and the analytical model source).
@@ -147,6 +178,7 @@ class ServingEngine:
             self.runtime = RuntimeController(cfg, self.plan, hw,
                                              align=self._align)
         self._weight_bytes = weight_tier_bytes(self.params)
+        self._weight_link_bytes = weight_link_bytes(self.params, self.n_links)
 
         dtype = next(iter(jax.tree.leaves(params))).dtype
         self.pcache: PagedTieredCache | None = None
@@ -168,6 +200,7 @@ class ServingEngine:
         self.stats.final_window = self.window
         self._next_tok = np.zeros((max_batch, 1), dtype=np.int32)
         self._prefill_calls_step = 0       # prefill passes in the last _admit
+        self._step_params: dict[str, Any] | None = None  # per-step fetch cache
 
     def _make_pcache(self, n_kv_layers: int, dtype) -> PagedTieredCache:
         cfg = self.cfg
@@ -187,7 +220,9 @@ class ServingEngine:
             max_slots=self.max_batch,
             max_pages_per_slot=-(-self.max_len // self.page_size),
             dtype=dtype,
-            store_v=not cfg.use_mla)
+            store_v=not cfg.use_mla,
+            mesh=self.mesh,
+            mesh_axis=self.mesh_axis)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -218,7 +253,7 @@ class ServingEngine:
             self._prefill_calls_step += 1
             t0 = time.time()
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = M.prefill(self.cfg, self.params,
+            logits, cache1 = M.prefill(self.cfg, self._fetched_params(),
                                        {"tokens": tokens}, max_len=self.max_len)
             nxt = int(jnp.argmax(logits[0, -1]))
             req.out_tokens.append(nxt)
@@ -237,6 +272,18 @@ class ServingEngine:
             self._note_occupancy()
             fi += 1
         return prefill_tokens
+
+    def _fetched_params(self) -> dict[str, Any]:
+        """The step's fetch-once broadcast of the sharded host partitions
+        (`tiered_decode.fetch_remote_shards`; identity off-mesh), cached so
+        a step that both admits prefills and decodes gathers each operand
+        once.  The traffic *model* still charges one weight read per pass —
+        on hardware every forward re-streams the remote partitions; the
+        cached tree is the CPU simulation's stand-in for that stream."""
+        if self._step_params is None:
+            self._step_params = TD.fetch_remote_shards(
+                self.params, self.mesh, self.mesh_axis)
+        return self._step_params
 
     def params_for_prefill(self) -> dict[str, Any]:
         """Deprecated shim: prefill no longer materializes the tiers —
@@ -285,6 +332,7 @@ class ServingEngine:
         DMA window is re-read from the controller every step and a
         telemetry sample is reported after the compute."""
         t_step = time.time()
+        self._step_params = None           # new step, new fetch
         if self.runtime is not None:
             self.window = self.runtime.window
         prefill_tokens = self._admit()
@@ -307,10 +355,13 @@ class ServingEngine:
                 self.cfg, self.params, self.cache, tokens,
                 jnp.asarray(positions))
         elif self.pcache is None:
-            # Pure-SSM decoder: recurrent tiered step, no KV pages.
+            # Pure-SSM decoder: recurrent tiered step, no KV pages.  The
+            # step reuses the admit-phase fetch (cached per step); the
+            # decode path's own fetch stage no-ops on the rebuilt tree.
             logits, self.cache = TD.tiered_ssm_decode_step(
-                self.cfg, self.params, self.cache, tokens,
-                window=self.window, use_kernel=True)
+                self.cfg, self._fetched_params(), self.cache, tokens,
+                window=self.window, use_kernel=True,
+                mesh=self.mesh, mesh_axis=self.mesh_axis)
         else:
             for slot in np.nonzero(active)[0]:
                 self.pcache.ensure_capacity(int(slot), int(self.lens[slot]) + 1)
@@ -320,19 +371,23 @@ class ServingEngine:
             attn_lens = np.where(active, self.lens + 1, 0).astype(np.int32)
             paged_args = (tokens, jnp.asarray(positions), jnp.asarray(attn_lens),
                           table, tier, wr_tier, wr_idx, wr_off)
+            pools_in = self.pcache.compute_pools()
             if self.cfg.family == "hybrid":
-                logits, self.cache, self.pcache.pools = TD.tiered_hybrid_decode_step(
-                    self.cfg, self.params, self.cache, self.pcache.pools,
+                logits, self.cache, pools_out = TD.tiered_hybrid_decode_step(
+                    self.cfg, self._fetched_params(), self.cache, pools_in,
                     *paged_args,
                     sink_local=self.pcache.sink_local,
                     sink_remote=self.pcache.sink_remote,
-                    window=self.window, use_kernel=True)
+                    window=self.window, use_kernel=True,
+                    mesh=self.mesh, mesh_axis=self.mesh_axis)
             else:
-                logits, self.pcache.pools = TD.paged_tiered_decode_step(
-                    self.cfg, self.params, self.pcache.pools, *paged_args,
+                logits, pools_out = TD.paged_tiered_decode_step(
+                    self.cfg, self._fetched_params(), pools_in, *paged_args,
                     sink_local=self.pcache.sink_local,
                     sink_remote=self.pcache.sink_remote,
-                    window=self.window, use_kernel=True)
+                    window=self.window, use_kernel=True,
+                    mesh=self.mesh, mesh_axis=self.mesh_axis)
+            self.pcache.commit_pools(pools_out)
         logits.block_until_ready()
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
@@ -368,14 +423,19 @@ class ServingEngine:
         n_active = int(active.sum())
         # Traffic accounting: decode reads every weight once per step, each
         # prefill pass reads them once more; KV traffic follows the page
-        # table's tier map.
-        w_local, w_remote = self._weight_bytes
+        # table's tier map.  Under a mesh each host link carries its 1/P
+        # slice of every sharded partition (whole copies for the
+        # divisibility fallback); remote_bytes is the sum over links.
+        w_local, _ = self._weight_bytes
         passes = (1 if n_active else 0) + self._prefill_calls_step
-        local_b, remote_b = w_local * passes, w_remote * passes
+        local_b = w_local * passes
+        link_b = [b * passes for b in self._weight_link_bytes]
         if self.pcache is not None and n_active:
-            kv_local, kv_remote = self.pcache.attended_bytes(self.lens, active)
+            kv_local, _ = self.pcache.attended_bytes(self.lens, active)
             local_b += kv_local
-            remote_b += kv_remote
+            kv_links = self.pcache.attended_link_bytes(
+                self.lens, active, self.n_links)
+            link_b = [a + b for a, b in zip(link_b, kv_links)]
         sample = StepSample(
             step=self.stats.decode_steps,
             duration_s=max(time.time() - t_step, 1e-9),
@@ -385,19 +445,55 @@ class ServingEngine:
             active_slots=n_active,
             mean_kv_len=float(self.lens[active].mean()) if n_active else 0.0,
             local_bytes=local_b,
-            remote_bytes=remote_b,
-            window=self.window)
+            remote_bytes=sum(link_b),
+            window=self.window,
+            remote_bytes_per_link=tuple(link_b) if self.n_links > 1 else None)
         new_params = self.runtime.on_step(sample, cache=self.pcache,
                                           params=self.params)
         if new_params is not None and new_params is not self.params:
+            if self.mesh is not None:
+                from repro.launch.sharding import shard_tiered_params
+
+                new_params = shard_tiered_params(
+                    new_params, self.mesh, self.mesh_axis)
             self.params = new_params
+            self._step_params = None       # repartitioned: refetch next use
             self._weight_bytes = weight_tier_bytes(self.params)
+            self._weight_link_bytes = weight_link_bytes(self.params, self.n_links)
         rs = self.runtime.stats
         self.stats.replans = rs.replans
         self.stats.promoted_pages = rs.promoted_pages
         self.stats.demoted_pages = rs.demoted_pages
         self.stats.final_window = self.runtime.window
         self._note_occupancy()
+
+    @property
+    def mesh_shape(self) -> list[int]:
+        """Device-axis shape of the serving mesh (``[1]`` off-mesh)."""
+        return [self.n_links]
+
+    def mesh_traffic_report(self) -> dict:
+        """Modeled host-link traffic for one full read of the offloaded
+        weights, against the §4.3.2 read-amplification oracle.
+
+        ``per_link_bytes`` is what the engine's own accounting says each
+        chip's host link carries (realized shard extents, burst-granularity
+        overhead applied); the oracle figures come from
+        `core.multicast.sharded_fetch_report` on the same host footprint.
+        On the fetch-once path the two agree and sit at ~1/P of the naive
+        figure; operands that fell back to replicated remotes push
+        ``per_link_bytes`` toward the naive bound.
+        """
+        _, w_remote = self._weight_bytes
+        rep = multicast.sharded_fetch_report(w_remote, self.n_links)
+        ov = multicast.GRANULARITY_OVERHEAD
+        return {
+            "n_devices": self.n_links,
+            "host_bytes": w_remote,
+            "per_link_bytes": [b * ov for b in self._weight_link_bytes],
+            "oracle_per_link_multicast": rep.traffic_multicast / self.n_links,
+            "oracle_per_link_naive": rep.traffic_no_multicast / self.n_links,
+        }
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0

@@ -70,12 +70,25 @@ class PagedTieredCache:
         dtype=jnp.float32,
         store_v: bool = True,
         temperature: PageTouchHistogram | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        mesh_axis: str | None = None,
     ):
         """``store_v=False`` allocates K pages only (MLA: the latent
         ``[ckv | k_rope]`` row serves as both K and V — the attention
         output is sliced back to the latent rank, so the V read aliases
         the K pool and the cache stores each latent exactly once, matching
-        the planner's per-token KV accounting)."""
+        the planner's per-token KV accounting).
+
+        ``mesh`` enables the sharded mode: page tables (and the local
+        pools) replicate across the mesh while the *remote* pools shard on
+        the in-page sequence axis — each chip stores, and streams over its
+        own host link, 1/P of every host-resident page (the split-K
+        fallback of `launch.sharding.cache_specs` carried to the paged
+        layout).  :meth:`compute_pools` rebuilds full pages for the decode
+        kernel (the KV side of the fetch-once broadcast) and
+        :meth:`commit_pools` re-commits a step's updated pools to the
+        sharded layout.  A page size that does not divide the mesh falls
+        back to replicated remote pools (naive fetch)."""
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         if local_pages + remote_pages < max_pages_per_slot:
@@ -88,6 +101,8 @@ class PagedTieredCache:
         self.max_slots = max_slots
         self.max_pages = max_pages_per_slot
         self.kv_names: tuple[str, ...] = ("k", "v") if store_v else ("k",)
+        self.mesh = mesh
+        self.mesh_axis = (mesh_axis or mesh.axis_names[-1]) if mesh is not None else None
         # +1 sink page at index n_{local,remote} (never allocated, never read)
         self.pools: dict[str, jax.Array] = {
             f"{name}_{suffix}": jnp.zeros(
@@ -95,6 +110,9 @@ class PagedTieredCache:
             for name in self.kv_names
             for suffix, pages in (("local", local_pages), ("remote", remote_pages))
         }
+        self.remote_sharded = False
+        if mesh is not None:
+            self.commit_pools(self.pools)
         self.free: dict[int, list[int]] = {
             LOCAL: list(range(local_pages)),
             REMOTE: list(range(remote_pages)),
@@ -111,6 +129,44 @@ class PagedTieredCache:
         self.spills = 0                # pressure-driven local->remote moves
         self.promotions = 0            # migration: remote->local page moves
         self.demotions = 0             # migration: local->remote (non-spill)
+
+    # -- mesh placement ----------------------------------------------------
+    def commit_pools(self, pools: dict[str, jax.Array]) -> None:
+        """Install a step's updated pools, re-committing the sharded layout.
+
+        Without a mesh this is plain assignment.  With one, local pools
+        replicate and remote pools shard 1/P on the in-page sequence axis
+        (`launch.sharding.remote_pool_spec`) — the storage layout between
+        steps, from which :meth:`compute_pools` fetches."""
+        if self.mesh is None:
+            self.pools = pools
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.sharding import remote_pool_spec
+
+        out: dict[str, jax.Array] = {}
+        sharded = False
+        for key, pool in pools.items():
+            spec = (remote_pool_spec(pool.shape, self.mesh, self.mesh_axis)
+                    if key.endswith("_remote") else P())
+            sharded = sharded or spec != P()
+            out[key] = jax.device_put(pool, NamedSharding(self.mesh, spec))
+        self.pools = out
+        self.remote_sharded = sharded
+
+    def compute_pools(self) -> dict[str, jax.Array]:
+        """The decode step's view: remote pages rebuilt whole on every chip
+        (each chip contributes the 1/P in-page slice its host link streams;
+        the reshard is the KV side of the fetch-once ICI all-gather).
+        Pass the step's updated pools back through :meth:`commit_pools`."""
+        if self.mesh is None or not self.remote_sharded:
+            return self.pools
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        repl = NamedSharding(self.mesh, P())
+        return {key: jax.device_put(pool, repl) if key.endswith("_remote")
+                else pool
+                for key, pool in self.pools.items()}
 
     # -- occupancy ---------------------------------------------------------
     @property
@@ -262,6 +318,19 @@ class PagedTieredCache:
             remote += int((tiers == REMOTE).sum())
             local += int((tiers == LOCAL).sum())
         return local * page_bytes, remote * page_bytes
+
+    def attended_link_bytes(self, lens: np.ndarray, active: np.ndarray,
+                            n_links: int) -> list[float]:
+        """Per-host-link bytes of one decode step's remote-page reads.
+
+        Sharded pools spread every remote page 1/P across the links
+        (fetch-once); the replicated fallback pulls each page whole over
+        every link (naive).  Sums to :meth:`attended_bytes`'s remote figure
+        times the replication factor."""
+        _, remote = self.attended_bytes(lens, active)
+        if self.remote_sharded:
+            return [remote / max(1, n_links)] * n_links
+        return [float(remote)] * n_links
 
     # -- data movement -----------------------------------------------------
     def write_prompt(self, slot: int, k: jax.Array,

@@ -117,6 +117,25 @@ def split_cache_batch(cache: dict[str, jax.Array], kv_ratio: float,
     }
 
 
+def fetch_remote_shards(params: dict[str, Any], mesh: Any,
+                        mesh_axis: str | None) -> dict[str, Any]:
+    """The decode path's fetch-once stage (paper §4.3.2, pod level).
+
+    Under a serving mesh the params tree arrives with every host-resident
+    partition sharded 1/P along its split axis (`launch.sharding.
+    shard_tiered_params`); one `kernels.ops.broadcast_remote` pass inside
+    ``shard_map`` pulls each chip's disjoint slice over its own host link
+    and rebuilds the full partitions over ICI — each offloaded byte
+    crosses a host link exactly once per step, then the single-chip
+    operand-type dispatch below runs unchanged (bitwise-identical tokens).
+    No mesh (or no sharded leaf) is a no-op.
+    """
+    if mesh is None:
+        return params
+    return ops.mesh_fetch_params(
+        params, mesh, mesh_axis or mesh.axis_names[-1])
+
+
 # --------------------------------------------------------------------------
 # Attention bodies.  The cache layouts differ only in how the new K/V row is
 # written and how attention gathers the cache, so every decode step injects
@@ -320,13 +339,18 @@ def paged_tiered_decode_step(
     sink_remote: int,
     window: int = 2,
     use_kernel: bool = True,
+    mesh: Any = None,
+    mesh_axis: str | None = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One ragged decode step over tiered weights + paged tiered KV for the
     attention-decoder families (dense / VLM / MoE / MLA).
 
     Every slot scatters its new K/V row (GQA heads, or the MLA latent as a
     single-head row) into the page named by (wr_tier, wr_idx, wr_off); idle
-    slots must be pointed at a sink page by the caller."""
+    slots must be pointed at a sink page by the caller.  With a ``mesh``
+    the weights' sharded host partitions are rebuilt first through the
+    fetch-once broadcast (:func:`fetch_remote_shards`)."""
+    params = fetch_remote_shards(params, mesh, mesh_axis)
     pools = dict(pools)
     write_and_attend = _paged_writer(
         pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,
@@ -344,12 +368,15 @@ def tiered_ssm_decode_step(
     *,
     window: int = 2,
     use_kernel: bool = True,
+    mesh: Any = None,
+    mesh_axis: str | None = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One recurrent decode step for pure-SSM decoders over tiered weights.
 
     No KV cache — the conv window and SSD state are per-slot recurrent
     state, always HBM-resident; the offloaded operands are the projection
     stacks (``ssm_in`` / ``ssm_out``), computed by the tiered GEMM."""
+    params = fetch_remote_shards(params, mesh, mesh_axis)
     x = params["embed"][tokens]
 
     def kmm(a, w):
@@ -386,10 +413,13 @@ def tiered_hybrid_decode_step(
     sink_remote: int,
     window: int = 2,
     use_kernel: bool = True,
+    mesh: Any = None,
+    mesh_axis: str | None = None,
 ) -> tuple[jax.Array, dict[str, jax.Array], dict[str, jax.Array]]:
     """One ragged decode step for Zamba2-style hybrids: each group runs its
     shared attention+MLP block (GQA over the group's paged tiered KV layer)
     followed by ``hybrid_attn_every`` tiered SSM layers."""
+    params = fetch_remote_shards(params, mesh, mesh_axis)
     pools = dict(pools)
     write_and_attend = _paged_writer(
         pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,

@@ -140,7 +140,7 @@ def test_broadcast_remote_shard_map():
 
     def f(local, remote):
         return ops.broadcast_remote(
-            tiering.TieredArray(local, remote, axis=0), "model")
+            tiering.TieredArray(local, remote, axis=0), "model").materialize()
 
     out = shard_map(f, mesh=mesh,
                     in_specs=(P(None, None), P("model", None)),

@@ -1,0 +1,208 @@
+"""Mesh-aware planning: the device axis of the tiering plan.
+
+These tests need no multi-device runtime — they pin the planning-layer
+contract: the greedy allocator solves on the aggregate of the P host
+links, partition extents split into equal 1/P slices, the per-link
+congestion windows match the single-link solve, and the per-link traffic
+accounting agrees with the §4.3.2 read-amplification oracle
+(`core.multicast`).  The runtime-side (shard_map / ServingEngine) half
+lives in test_mesh_serving.py under a forced multi-device host platform.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import engine as offload_engine
+from repro.core import multicast, tiering
+from repro.core.ebmodel import WorkloadSpec
+from repro.core.hardware import (
+    TPU_V5E,
+    MeshSpec,
+    mesh_hardware,
+    mesh_host_bandwidth,
+)
+from repro.models import model as M
+from repro.runtime.telemetry import weight_link_bytes
+
+KEY = jax.random.PRNGKey(0)
+WL = WorkloadSpec(batch=4, seq_len=64, phase="decode")
+
+
+def _plan(cfg, n_dev, ratio=0.5):
+    mesh = MeshSpec(n_devices=n_dev, axis_name="model") if n_dev > 1 else None
+    return offload_engine.plan(cfg, WL, TPU_V5E, global_ratio=ratio, mesh=mesh)
+
+
+# -- aggregate-of-links allocator ------------------------------------------
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_mesh_allocator_solves_on_aggregate_links(n_dev):
+    cfg = C.get_smoke("llama2_7b")
+    plan = _plan(cfg, n_dev)
+    assert plan.mesh is not None and plan.mesh.n_devices == n_dev
+    assert plan.mesh.aggregate_host_bw == pytest.approx(
+        mesh_host_bandwidth(TPU_V5E, n_dev))
+    assert plan.mesh.aggregate_host_bw > TPU_V5E.host.bandwidth
+    # Budget conservation: the per-op ratios still realize the global one.
+    total_c = sum(op.bytes for op in plan.ops)
+    offloaded = sum(op.bytes * plan.op_ratios[op.name] for op in plan.ops)
+    assert offloaded == pytest.approx(plan.global_ratio * total_c, rel=1e-6)
+    # P links pull disjoint slices in parallel => modeled latency can only
+    # improve on the single-link plan for the same offload budget.
+    assert plan.latency <= _plan(cfg, 1).latency + 1e-12
+
+
+def test_mesh_hardware_view():
+    hw4 = mesh_hardware(TPU_V5E, 4)
+    assert hw4.hbm == TPU_V5E.hbm                  # per-chip HBM untouched
+    assert hw4.peak_flops == TPU_V5E.peak_flops
+    assert hw4.host.capacity == 4 * TPU_V5E.host.capacity
+    # Aggregate host bw: min(P*B_h, B_ici*P/(P-1)).
+    ici = TPU_V5E.ici_link_bw * TPU_V5E.ici_links
+    assert hw4.host.bandwidth == pytest.approx(
+        min(4 * TPU_V5E.host.bandwidth, ici * 4 / 3))
+    assert mesh_hardware(TPU_V5E, 1) is TPU_V5E
+
+
+def test_per_link_windows_match_single_link_solve():
+    plan = _plan(C.get_smoke("llama2_7b"), 4)
+    assert len(plan.mesh.link_windows) == 4
+    for w in plan.mesh.link_windows:
+        # Each link paces itself against its own (identical) host link.
+        assert w.n_inflight == plan.window.n_inflight
+        assert w.n_streams == 1
+
+
+# -- mesh-divisible partitioning -------------------------------------------
+@pytest.mark.parametrize("arch", ["llama2_7b", "qwen3_moe_30b_a3b",
+                                  "deepseek_v2_236b"])
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_partition_slices_reassemble(arch, n_dev):
+    """Every remote extent divides the mesh; the 1/P slices are disjoint,
+    equal, and concatenate back to the unsharded host partition bitwise."""
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    plan = _plan(cfg, n_dev)
+    tiered = plan.partition(params, align=32)
+    leaves = [leaf for leaf in jax.tree.leaves(
+        tiered, is_leaf=lambda x: isinstance(x, tiering.TieredArray))
+        if isinstance(leaf, tiering.TieredArray)]
+    assert leaves, "ratio 0.5 must offload something"
+    for leaf in leaves:
+        dim = leaf.remote.shape[leaf.axis]
+        assert dim % n_dev == 0, (
+            f"remote extent {dim} not divisible into {n_dev} host-link slices")
+        slices = np.split(np.asarray(leaf.remote), n_dev, axis=leaf.axis)
+        rebuilt = np.concatenate(slices, axis=leaf.axis)
+        np.testing.assert_array_equal(rebuilt, np.asarray(leaf.remote))
+        assert all(s.shape == slices[0].shape for s in slices)
+
+
+def test_partition_zero_ratio_has_no_tiers():
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    tiered = _plan(cfg, 4, ratio=0.0).partition(params, align=32)
+    assert not any(isinstance(leaf, tiering.TieredArray)
+                   for leaf in jax.tree.leaves(
+                       tiered, is_leaf=lambda x: isinstance(x, tiering.TieredArray)))
+
+
+# -- fetch-once traffic accounting vs the multicast oracle ------------------
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_sharded_fetch_oracle_drops_per_link_traffic(n_dev):
+    rep = multicast.sharded_fetch_report(1 << 20, n_dev)
+    # Naive: every chip pulls the whole partition over its own link.
+    assert rep.traffic_no_multicast == pytest.approx(
+        (1 << 20) * n_dev * multicast.GRANULARITY_OVERHEAD)
+    # Fetch-once: each byte crosses one host link, whatever the mesh size.
+    assert rep.traffic_multicast == pytest.approx(
+        (1 << 20) * multicast.GRANULARITY_OVERHEAD)
+    assert rep.traffic_no_multicast / rep.traffic_multicast == pytest.approx(n_dev)
+
+
+def test_weight_link_bytes_matches_oracle_within_1pct():
+    """The engine-side per-link accounting (realized shard extents) agrees
+    with `core.multicast` on the fetch-once per-device traffic."""
+    n_dev = 4
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    plan = _plan(cfg, n_dev)
+    tiered = plan.partition(params, align=32)
+
+    def tag(leaf):
+        if isinstance(leaf, tiering.TieredArray):
+            return tiering.TieredArray(leaf.local, leaf.remote, leaf.axis,
+                                       mesh_axes="model")
+        return leaf
+    tagged = jax.tree.map(tag, tiered,
+                          is_leaf=lambda x: isinstance(x, tiering.TieredArray))
+    links = weight_link_bytes(tagged, n_dev)
+    total_remote = sum(
+        leaf.remote.size * leaf.remote.dtype.itemsize
+        for leaf in jax.tree.leaves(
+            tagged, is_leaf=lambda x: isinstance(x, tiering.TieredArray))
+        if isinstance(leaf, tiering.TieredArray))
+    oracle = multicast.sharded_fetch_report(total_remote, n_dev)
+    ov = multicast.GRANULARITY_OVERHEAD
+    for link in links:
+        assert link * ov == pytest.approx(
+            oracle.traffic_multicast / n_dev, rel=0.01)
+    # ~1/P of the naive per-link figure (satellite: broadcast vs replication).
+    assert sum(links) * ov == pytest.approx(
+        oracle.traffic_no_multicast / n_dev, rel=0.01)
+    # Single-link reduction: the same accounting off-mesh is the old total.
+    assert weight_link_bytes(tiered, 1)[0] == pytest.approx(total_remote)
+
+
+def test_replan_keeps_the_device_axis():
+    from repro.runtime.replan import Replanner, repartition
+    from repro.runtime.telemetry import StepSample, Telemetry
+
+    cfg = C.get_smoke("llama2_7b")
+    plan = _plan(cfg, 4)
+    rp = Replanner(cfg, TPU_V5E, plan)
+    tel = Telemetry()
+    for step in range(6):   # all-prefill mix: forces drift past threshold
+        tel.record(StepSample(step=step, duration_s=1e-3, prefill_tokens=64,
+                              decode_tokens=0, queue_depth=0, active_slots=0,
+                              mean_kv_len=0.0, local_bytes=1e6,
+                              remote_bytes=1e6, window=2))
+    new = rp.maybe_replan(tel)
+    assert new is not None and new.mesh is not None
+    assert new.mesh.n_devices == 4 and new.mesh.axis_name == "model"
+    # Mesh-divisible re-splits: repartition rounds to lcm(align, P).
+    params = M.init_params(cfg, KEY)
+    tiered = plan.partition(params, align=32)
+    reparted, _ = repartition(tiered, new, align=32)
+    for leaf in jax.tree.leaves(
+            reparted, is_leaf=lambda x: isinstance(x, tiering.TieredArray)):
+        if isinstance(leaf, tiering.TieredArray):
+            assert leaf.remote.shape[leaf.axis] % 4 == 0
+
+
+def test_telemetry_source_resolves_links():
+    """The hardware-path measurement adapter must hand each per-link AIMD
+    loop its own link's bandwidth, not the all-links sum."""
+    from repro.runtime.telemetry import StepSample, Telemetry, TelemetrySource
+
+    tel = Telemetry()
+    tel.record(StepSample(step=0, duration_s=1.0, prefill_tokens=0,
+                          decode_tokens=4, queue_depth=0, active_slots=4,
+                          mean_kv_len=8.0, local_bytes=0.0, remote_bytes=40.0,
+                          window=2, remote_bytes_per_link=(10.0, 30.0)))
+    src = TelemetrySource(tel)
+    assert src.measure(2).host_bw == pytest.approx(40.0)       # aggregate
+    assert src.measure_link(0, 2).host_bw == pytest.approx(10.0)
+    assert src.measure_link(1, 2).host_bw == pytest.approx(30.0)
+    assert src.measure_link(5, 2).host_bw == pytest.approx(40.0)  # fallback
+
+
+def test_tiered_array_mesh_tag_is_pytree_aux():
+    t = tiering.TieredArray(jnp.zeros((2, 4)), jnp.zeros((2, 4)), axis=-1,
+                            mesh_axes="model")
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert t2.mesh_axes == "model" and t2.axis == -1
