@@ -1,4 +1,5 @@
-"""Serving benchmark: static vs adaptive vs mesh-sharded engine.
+"""Serving benchmark: static vs adaptive vs mesh-sharded engine, plus
+trace-driven scheduler scenarios.
 
 Runs the end-to-end serving driver three ways — the static plan, the
 adaptive runtime, and (in a subprocess with a forced multi-device host
@@ -7,6 +8,15 @@ benchmark harness prints and the machine-readable ``BENCH_serving.json``
 payload (``benchmarks.run --json-out``), so the serving perf trajectory
 (tokens/s, TTFT percentiles, achieved bandwidth per tier, static vs
 adaptive, 1-device vs N-device sharded) is tracked across PRs.
+
+The scenario section replays named workload traces
+(`repro.frontend.workload` — steady Poisson, bursty, long-prompt-heavy;
+arrival gaps at smoke-model modeled-microsecond scale so the queue
+actually builds) through the FCFS baseline and the SLO scheduler
+(chunked prefill + tier-demotion preemption) *on identical traces*, and
+reports modeled tokens/s and TTFT p95 per scheduler — the frontend's
+perf trajectory.  Generated tokens are scheduler-invariant (pinned by
+tests); only the latency distribution moves.
 
 Every per-run report carries a ``mesh_shape`` field; the sharded run adds
 ``mesh_traffic`` (per-link fetch-once bytes vs the multicast oracle).
@@ -32,7 +42,61 @@ ARGS = [
     "--offload-ratio", "0.5", "--page-size", "4",
 ]
 
+# Trace scenario runs share the engine shape but take their request mix
+# (arrivals, lengths, classes) from the replayed trace.
+TRACE_ARGS = [
+    "--arch", "llama2_7b", "--smoke", "--max-batch", "2", "--max-len", "64",
+    "--offload-ratio", "0.5", "--page-size", "4",
+]
+
 SHARDED_DEVICES = int(os.environ.get("BENCH_MESH_DEVICES", "2"))
+
+SCENARIO_SCHEDULERS = ("fcfs", "slo")
+
+
+def _scenario_traces() -> dict:
+    """The named presets from `frontend.workload.SCENARIOS` (the single
+    definition — already sized for smoke models on the modeled clock)."""
+    from repro.frontend.workload import SCENARIOS, scenario_trace
+
+    return {name: scenario_trace(name) for name in SCENARIOS}
+
+
+def _scenario_reports() -> dict:
+    """{scenario: {scheduler: serve report}} over identical traces."""
+    from repro.launch.serve import main as serve_main
+
+    out: dict[str, dict] = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, trace in _scenario_traces().items():
+            path = os.path.join(tmp, f"{name}.json")
+            trace.save(path)
+            out[name] = {
+                sched: serve_main(TRACE_ARGS + [
+                    "--scheduler", sched, "--trace", path,
+                    "--bench-json", ""])
+                for sched in SCENARIO_SCHEDULERS
+            }
+    return out
+
+
+def _scenario_rows(scenarios: dict) -> list[Row]:
+    rows: list[Row] = []
+    for name, reps in scenarios.items():
+        for sched, rep in reps.items():
+            modeled = rep.get("modeled", {})
+            rows.append((f"serving_{name}_{sched}_ttft_p95_us",
+                         rep["ttft_p95_ms"] * 1e3,
+                         modeled.get("tokens_per_modeled_s", 0.0)))
+        # headline: FCFS-vs-SLO interactive-class TTFT p95 ratio (>1 means
+        # the SLO scheduler wins for the latency-sensitive class)
+        cls = "interactive"
+        p95 = {s: reps[s]["scheduling"]["slo"].get(cls, {}).get("ttft_p95", 0.0)
+               for s in SCENARIO_SCHEDULERS}
+        if p95.get("slo"):
+            rows.append((f"serving_{name}_slo_ttft_p95_gain", 0.0,
+                         p95["fcfs"] / p95["slo"]))
+    return rows
 
 
 def _sharded_report(n_devices: int) -> dict | None:
@@ -98,7 +162,9 @@ def collect() -> tuple[list[Row], dict]:
         naive = mt["oracle_per_link_naive"]
         rows.append(("serving_sharded_link_traffic_drop", 0.0,
                      naive / per_link if per_link else 0.0))
-    report = {"static": static, "adaptive": adaptive}
+    scenarios = _scenario_reports()
+    rows.extend(_scenario_rows(scenarios))
+    report = {"static": static, "adaptive": adaptive, "scenarios": scenarios}
     if sharded is not None:
         report["sharded"] = sharded
     return rows, report

@@ -1,0 +1,28 @@
+"""Serving frontend: SLO-aware scheduling, chunked prefill, tier-demotion
+preemption, and the trace-driven workload harness.
+
+Import surface (kept free of `serving.engine` so the engine can import
+the scheduler/metrics modules without a cycle; `frontend.workload`
+imports the engine lazily inside `Trace.to_requests`):
+
+* `frontend.scheduler` — `Scheduler` (FCFS), `PriorityScheduler`,
+  `SLOScheduler`, `get_scheduler`;
+* `frontend.metrics` — `WallClock` / `ModeledClock`,
+  `modeled_step_seconds`, `RequestRecord`, `slo_report`;
+* `frontend.workload` — `Trace` / `TraceEntry` / `TenantClass`,
+  `poisson_trace` / `bursty_trace` / `long_prompt_trace`, `SCENARIOS`.
+"""
+from repro.frontend.metrics import (     # noqa: F401
+    ModeledClock,
+    RequestRecord,
+    WallClock,
+    modeled_step_seconds,
+    slo_report,
+)
+from repro.frontend.scheduler import (   # noqa: F401
+    PriorityScheduler,
+    Scheduler,
+    SLOScheduler,
+    get_scheduler,
+    scheduler_names,
+)

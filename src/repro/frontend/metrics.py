@@ -1,0 +1,159 @@
+"""Per-request lifecycle accounting for the serving frontend.
+
+Three pieces, all numpy/stdlib below the engine (no serving imports, so
+`serving.engine` can fold them into `EngineStats` without a cycle):
+
+* **Clocks** — the engine timestamps every lifecycle event through a
+  :class:`Clock`.  :class:`WallClock` is ``time.time`` (the default; the
+  engine behaves exactly as before).  :class:`ModeledClock` is a virtual
+  clock the engine advances by the analytical step latency
+  (:func:`modeled_step_seconds`) — trace replay and the scheduler
+  acceptance tests run on it so TTFT/SLO comparisons are deterministic
+  functions of the schedule, not of CPU-interpret wall time.
+* **Per-request records** — :class:`RequestRecord` snapshots one finished
+  request (class, priority, queue delay, TTFT, end-to-end latency,
+  preemption count, SLO verdict).
+* **SLO reports** — :func:`slo_report` groups records per tenant class:
+  attainment (fraction of requests whose TTFT met their SLO), TTFT / queue
+  delay / e2e percentiles, preemption totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+class Clock:
+    """Timestamp source for request lifecycle events."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def advance(self, dt: float) -> None:   # pragma: no cover - interface
+        """Advance virtual time (no-op on wall clocks)."""
+
+
+class WallClock(Clock):
+    def now(self) -> float:
+        return time.time()
+
+    def advance(self, dt: float) -> None:
+        pass
+
+
+class ModeledClock(Clock):
+    """Virtual time advanced by the engine's modeled per-step latency.
+
+    Starts at 0.0 so trace arrival offsets are absolute times."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.t += dt
+
+
+def modeled_step_seconds(
+    cfg,
+    hw,
+    op_ratios: dict[str, float],
+    *,
+    prefill_tokens: int = 0,
+    decode_slots: int = 0,
+    mean_kv_len: float = 0.0,
+    kv_local_bytes: float = 0.0,
+    kv_remote_bytes: float = 0.0,
+) -> float:
+    """Analytical latency of one engine step (the modeled clock's tick).
+
+    Weights go through the paper's EB model (`core.ebmodel.total_latency`
+    over the plan's per-op ratios — same machinery as the adaptive
+    runtime's static-vs-adaptive accounting).  The decode KV term uses the
+    *live* page residency when the caller passes ``kv_local_bytes`` /
+    ``kv_remote_bytes`` (each tier streamed at its own bandwidth), so tier
+    demotion — preemption, migration, spills — is visible to the clock;
+    with both at zero the planner's attention ops price the KV instead.
+    """
+    from repro.core import engine as offload_engine
+    from repro.core.ebmodel import WorkloadSpec, total_latency
+
+    t = 0.0
+    live_kv = kv_local_bytes > 0 or kv_remote_bytes > 0
+    if decode_slots:
+        wl = WorkloadSpec(batch=decode_slots,
+                          seq_len=max(1, round(mean_kv_len)), phase="decode")
+        ops = offload_engine.enumerate_ops(cfg, wl)
+        if live_kv:
+            ops = [op for op in ops if op.kind != "attention"]
+        t += total_latency(ops, [op_ratios.get(op.name, 0.0) for op in ops], hw)
+        t += kv_local_bytes / hw.hbm.bandwidth
+        t += kv_remote_bytes / hw.host.bandwidth
+    if prefill_tokens:
+        wl = WorkloadSpec(batch=1, seq_len=prefill_tokens, phase="prefill")
+        ops = offload_engine.enumerate_ops(cfg, wl)
+        t += total_latency(ops, [op_ratios.get(op.name, 0.0) for op in ops], hw)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Per-request lifecycle records
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """Snapshot of one finished request's lifecycle."""
+
+    rid: int
+    cls: str                        # tenant / priority class name
+    priority: int
+    prompt_tokens: int
+    output_tokens: int
+    queue_delay: float              # first prefill chunk − submit
+    ttft: float                     # first token − submit
+    e2e: float                      # done − submit
+    preemptions: int                # tier-demotion preemptions suffered
+    slo_ttft_s: float | None        # the class's TTFT SLO (None = best effort)
+
+    @property
+    def slo_ok(self) -> bool | None:
+        """TTFT within SLO (None when the request carries no SLO)."""
+        if self.slo_ttft_s is None:
+            return None
+        return self.ttft <= self.slo_ttft_s
+
+
+def percentile(values: list[float], q: float) -> float:
+    return float(np.percentile(values, q)) if values else 0.0
+
+
+def slo_report(records: list[RequestRecord]) -> dict:
+    """Per-class SLO attainment + latency percentiles.
+
+    Returns ``{cls: {requests, attainment, ttft_p50/p95, queue_delay_p95,
+    e2e_p95, preemptions}}``; ``attainment`` is None for classes with no
+    SLO (best effort)."""
+    by_cls: dict[str, list[RequestRecord]] = {}
+    for r in records:
+        by_cls.setdefault(r.cls, []).append(r)
+    out: dict[str, dict] = {}
+    for cls, rs in sorted(by_cls.items()):
+        verdicts = [r.slo_ok for r in rs if r.slo_ok is not None]
+        out[cls] = {
+            "requests": len(rs),
+            "attainment": (sum(verdicts) / len(verdicts)) if verdicts else None,
+            "ttft_p50": percentile([r.ttft for r in rs], 50),
+            "ttft_p95": percentile([r.ttft for r in rs], 95),
+            "queue_delay_p95": percentile([r.queue_delay for r in rs], 95),
+            "e2e_p95": percentile([r.e2e for r in rs], 95),
+            "preemptions": sum(r.preemptions for r in rs),
+        }
+    return out

@@ -16,10 +16,21 @@ machine-readable benchmark report (tokens/s, TTFT percentiles, achieved
 vs predicted bandwidth per tier, modeled static-vs-adaptive throughput);
 with ``--adaptive`` it defaults to ``BENCH_serving.json`` so the perf
 trajectory is tracked across PRs (the CI smoke job uploads it).
+
+The serving frontend (`repro.frontend`) plugs in through three knobs:
+``--scheduler {fcfs,priority,slo}`` selects the admission policy (the SLO
+scheduler defaults to chunked prefill + tier-demotion preemption),
+``--prefill-chunk N`` caps prompt tokens prefilled per step, and the
+workload comes either from ``--trace PATH`` (replay a checked-in trace)
+or ``--arrival-rate R`` (synthesize Poisson arrivals with the default
+tenant classes).  Both trace modes run on the *modeled clock* — arrival
+times are virtual seconds and TTFT/queue-delay/SLO figures are
+deterministic functions of the schedule, not of host wall time.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -27,6 +38,9 @@ import jax
 import numpy as np
 
 import repro.configs as C
+from repro.frontend.metrics import ModeledClock
+from repro.frontend.scheduler import scheduler_names
+from repro.frontend.workload import Trace, poisson_trace
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -37,6 +51,9 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
         "arch": args.arch,
         "smoke": bool(args.smoke),
         "adaptive": bool(args.adaptive),
+        "scheduler": engine.scheduler.name,
+        "prefill_chunk": engine.scheduler.chunk_tokens,
+        "trace": args.trace or ("poisson" if args.arrival_rate else None),
         "mesh_shape": engine.mesh_shape,
         "requests": args.requests,
         "served": stats.served,
@@ -49,7 +66,17 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
         "tpot_ms": stats.tpot * 1e3,
         "ttft_p50_ms": stats.ttft_p50 * 1e3,
         "ttft_p95_ms": stats.ttft_p95 * 1e3,
+        "queue_delay_p50_ms": stats.queue_delay_p50 * 1e3,
+        "queue_delay_p95_ms": stats.queue_delay_p95 * 1e3,
+        "e2e_p50_ms": stats.e2e_p50 * 1e3,
+        "e2e_p95_ms": stats.e2e_p95 * 1e3,
         "decode_steps": stats.decode_steps,
+        "scheduling": {
+            "prefill_chunks": stats.prefill_chunks,
+            "preemptions": stats.preemptions,
+            "preempt_demoted_pages": stats.preempt_demoted_pages,
+            "slo": stats.slo_report(),
+        },
         "kv": {
             "spills": stats.spills,
             "local_pages_hwm": stats.local_pages_hwm,
@@ -58,6 +85,12 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
         "window": {"static": engine.plan.window.n_inflight,
                    "final": stats.final_window},
     }
+    if isinstance(engine.clock, ModeledClock):
+        mk = engine.clock.now()
+        report["modeled"] = {
+            "makespan_s": mk,
+            "tokens_per_modeled_s": stats.generated_tokens / mk if mk else 0.0,
+        }
     if engine.mesh is not None:
         report["mesh_traffic"] = engine.mesh_traffic_report()
     if engine.runtime is not None:
@@ -93,6 +126,27 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark report here "
                          "(default BENCH_serving.json with --adaptive)")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=sorted(scheduler_names()),
+                    help="serving frontend policy: fcfs (whole-prompt "
+                         "admission order), priority, or slo (earliest "
+                         "deadline first + chunked prefill + tier-demotion "
+                         "preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="N",
+                    help="chunked prefill: at most N prompt tokens per step "
+                         "(default: scheduler's own budget; fcfs = whole "
+                         "prompts)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a workload trace (frontend.workload JSON) "
+                         "on the modeled clock; overrides --requests/"
+                         "--prompt-len/--new-tokens")
+    ap.add_argument("--arrival-rate", type=float, default=None, metavar="RPS",
+                    help="synthesize a Poisson trace at this rate (modeled "
+                         "seconds) with the default tenant classes instead "
+                         "of submitting everything at t=0")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="override the interactive class's TTFT SLO for "
+                         "synthesized traces (ms, modeled clock)")
     args = ap.parse_args(argv)
     if args.bench_json is None and args.adaptive:
         args.bench_json = "BENCH_serving.json"
@@ -108,12 +162,29 @@ def main(argv: list[str] | None = None) -> dict:
                 f"--xla_force_host_platform_device_count={args.mesh_devices}")
         mesh = jax.sharding.Mesh(
             np.array(jax.devices()[:args.mesh_devices]), ("model",))
+    trace = None
+    if args.trace:
+        trace = Trace.load(args.trace)
+    elif args.arrival_rate:
+        from repro.frontend.workload import DEFAULT_CLASSES
+        classes = DEFAULT_CLASSES
+        if args.slo_ttft_ms is not None:
+            classes = tuple(
+                dataclasses.replace(c, slo_ttft_s=args.slo_ttft_ms / 1e3)
+                if c.slo_ttft_s is not None else c
+                for c in classes)
+        trace = poisson_trace(
+            args.requests, rate_rps=args.arrival_rate, classes=classes,
+            prompt_max=max(4, args.max_len - args.new_tokens - 2),
+            out_max=args.new_tokens, seed=0)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
         global_offload_ratio=None if args.hbm_gb is not None else args.offload_ratio,
         use_kernels=not args.no_kernels, page_size=args.page_size,
-        adaptive=args.adaptive, mesh=mesh)
+        adaptive=args.adaptive, mesh=mesh,
+        scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
+        clock=ModeledClock() if trace is not None else None)
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
@@ -132,17 +203,39 @@ def main(argv: list[str] | None = None) -> dict:
 
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(3, cfg.vocab, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.new_tokens))
+    if trace is not None:
+        print(f"trace: {trace.description or args.trace} "
+              f"({len(trace.entries)} requests) | scheduler {args.scheduler} "
+              f"chunk {engine.scheduler.chunk_tokens}")
+        for req in trace.to_requests(cfg.vocab):
+            engine.submit(req)
+    else:
+        for rid in range(args.requests):
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(3, cfg.vocab, args.prompt_len).astype(np.int32),
+                max_new_tokens=args.new_tokens))
     stats = engine.run()
     wall = time.time() - t0
     print(f"served {stats.served} requests in {wall:.2f}s | "
           f"decode steps {stats.decode_steps} | TPOT {stats.tpot*1e3:.1f} ms | "
           f"TTFT p50 {stats.ttft_p50*1e3:.1f} ms p95 {stats.ttft_p95*1e3:.1f} ms | "
+          f"queue p95 {stats.queue_delay_p95*1e3:.1f} ms | "
+          f"e2e p95 {stats.e2e_p95*1e3:.1f} ms | "
           f"prefill {stats.prefill_time:.2f}s")
+    if stats.prefill_chunks or stats.preemptions:
+        print(f"frontend: prefill chunks {stats.prefill_chunks} | "
+              f"preemptions {stats.preemptions} "
+              f"({stats.preempt_demoted_pages} pages demoted)")
+    slo = stats.slo_report()
+    if trace is not None and slo:
+        for cls, rep in slo.items():
+            att = ("n/a" if rep["attainment"] is None
+                   else f"{rep['attainment']*100:.0f}%")
+            print(f"  class {cls}: n={rep['requests']} slo={att} "
+                  f"ttft p95 {rep['ttft_p95']*1e3:.1f} ms | "
+                  f"queue p95 {rep['queue_delay_p95']*1e3:.1f} ms | "
+                  f"preemptions {rep['preemptions']}")
     if engine.tiered and engine.plan.kv_pages is not None:
         pp = engine.plan.kv_pages
         print(f"kv pages: size={pp.page_size} local={pp.local_pages} "

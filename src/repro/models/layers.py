@@ -253,6 +253,75 @@ def attention_decode(
     return y, k_cache, v_cache
 
 
+def attention_chunk(
+    cfg: ModelConfig,
+    x: jax.Array,                  # [B,n,d] — prompt chunk [start, start+n)
+    p: Params,
+    k_cache: jax.Array,            # [B,S,K,hd], filled for [0, start)
+    v_cache: jax.Array,
+    positions: jax.Array,          # [n] absolute positions (start..start+n)
+    start: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-token prefill continuation: project the chunk's Q/K/V, write
+    K/V into the cache at ``start``, and attend the chunk's queries over
+    the whole prefix (cached keys plus this chunk, causal within the
+    chunk).  The n==1 case coincides with `attention_decode`; start==0
+    against a zero cache is a whole-prefix pass."""
+    hd = cfg.resolved_head_dim
+    n = x.shape[1]
+    q, k, v = qkv_project(cfg, x, p)
+    q, k = _maybe_qk_norm(cfg, q, k, p)
+    rot = int(hd * cfg.rope_fraction)
+    if rot:
+        cos, sin = rope_cos_sin(positions, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, start, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, start, 0, 0))
+    out = attend(cfg, q, k_cache, v_cache, causal=True,
+                 q_offset=start, kv_len=start + n)
+    y = matmul(out.reshape(*x.shape[:2], cfg.padded_heads * hd), p["wo"])
+    return y, k_cache, v_cache
+
+
+def mla_attention_chunk(
+    cfg: ModelConfig,
+    x: jax.Array,                  # [B,n,d]
+    p: Params,
+    ckv_cache: jax.Array,          # [B,S,rank], filled for [0, start)
+    krope_cache: jax.Array,        # [B,S,rd]
+    positions: jax.Array,          # [n]
+    start: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MLA prefill continuation: write the chunk's latents into the cache,
+    then attend in the *expanded* form (K/V re-expanded from the cached
+    latents via ``wkv_b`` — prefill numerics, matching
+    `mla_attention_block`; positions past ``start+n`` are masked)."""
+    b, n, _ = x.shape
+    h, nd, rd, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = mla_project_q(cfg, x, p)
+    c_kv, k_rope = mla_project_kv_latent(cfg, x, p)
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin, rd)
+    k_rope_r = apply_rope(k_rope[..., None, :], cos, sin, rd)[..., 0, :]
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, start, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope_r.astype(krope_cache.dtype), (0, start, 0))
+    s = ckv_cache.shape[1]
+    kv = matmul(ckv_cache, p["wkv_b"]).reshape(b, s, h, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_cache[:, :, None, :], (b, s, h, rd))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attend(cfg, q_full, k_full, v, causal=True,
+                 q_offset=start, kv_len=start + n)
+    return matmul(out.reshape(b, n, h * vd), p["wo"]), ckv_cache, krope_cache
+
+
 # --------------------------------------------------------------------------
 # MLPs
 # --------------------------------------------------------------------------

@@ -429,6 +429,115 @@ def _hybrid_prefill(cfg: ModelConfig, params: Params, x, positions, pad):
 
 
 # ==========================================================================
+# Chunked prefill: continue a partially filled cache by n tokens
+# ==========================================================================
+def prefill_chunk(cfg: ModelConfig, params: Params, cache: Cache,
+                  tokens: jax.Array, start: int) -> tuple[jax.Array, Cache]:
+    """Process prompt tokens [start, start+n) against a cache filled for
+    [0, start) — the compute primitive behind the serving frontend's
+    chunked prefill (prompts split into fixed token budgets interleaved
+    with decode steps).
+
+    tokens: [B, n] int32; cache: the full-size cache from ``init_cache``
+    (attention families: [L,B,max_len,...] K/V or latent entries; SSM:
+    conv/state carries; hybrids: both).  ``start == 0`` against a fresh
+    zero cache is a whole-prefix pass: attention masks the empty cache
+    away and the SSM conv history of zeros matches `_causal_conv`'s zero
+    padding, so feeding a prompt in chunks of any size yields the same
+    cache and next-token logits as one `prefill` call (exact-token
+    equivalence is pinned by the scheduler parity tests).
+
+    Returns (logits [B,1,vocab] at the chunk's last position, cache).
+    """
+    x = params["embed"][tokens]
+    bsz, t = x.shape[:2]
+    positions = jnp.arange(start, start + t)
+
+    if cfg.family == "hybrid":
+        return _hybrid_prefill_chunk(cfg, params, cache, x, positions, start)
+
+    if cfg.family == "ssm":
+        def layer(h, c):
+            lp, conv, state = c
+            y, conv, state = S.ssm_block_chunk(
+                cfg, L.norm(cfg, h, lp, "ln1"), lp, conv, state)
+            return h + y, {"conv": conv, "state": state}
+        x, new_cache = jax.lax.scan(
+            layer, x, (params["layers"], cache["conv"], cache["state"]))
+        return lm_head(cfg, params, x[:, -1:]), new_cache
+
+    if cfg.use_mla:
+        def layer(h, c):
+            lp, ckv_c, krope_c = c
+            hn = L.norm(cfg, h, lp, "ln1")
+            attn, ckv_c, krope_c = L.mla_attention_chunk(
+                cfg, hn, lp, ckv_c, krope_c, positions, start)
+            h = h + attn
+            ffn_in = L.norm(cfg, h, lp, "ln2")
+            ffn = (L.moe_block(cfg, ffn_in, lp) if cfg.family == "moe"
+                   else L.mlp_block(cfg, ffn_in, lp))
+            return h + ffn, {"ckv": ckv_c, "krope": krope_c}
+        x, new_cache = jax.lax.scan(
+            layer, x, (params["layers"], cache["ckv"], cache["krope"]))
+        return lm_head(cfg, params, x[:, -1:]), new_cache
+
+    def layer(h, c):
+        lp, k_c, v_c = c
+        hn = L.norm(cfg, h, lp, "ln1")
+        attn, k_c, v_c = L.attention_chunk(cfg, hn, lp, k_c, v_c,
+                                           positions, start)
+        h = h + attn
+        ffn_in = L.norm(cfg, h, lp, "ln2")
+        ffn = (L.moe_block(cfg, ffn_in, lp) if cfg.family == "moe"
+               else L.mlp_block(cfg, ffn_in, lp))
+        return h + ffn, {"k": k_c, "v": v_c}
+
+    x, new_cache = jax.lax.scan(
+        layer, x, (params["layers"], cache["k"], cache["v"]))
+    return lm_head(cfg, params, x[:, -1:]), new_cache
+
+
+def _hybrid_prefill_chunk(cfg: ModelConfig, params: Params, cache: Cache,
+                          x, positions, start: int):
+    k_every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k_every
+    h0 = x
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, k_every) + a.shape[1:]), params["layers"])
+    conv = cache["conv"].reshape((n_groups, k_every) + cache["conv"].shape[1:])
+    state = cache["state"].reshape((n_groups, k_every) + cache["state"].shape[1:])
+    block_ids = jnp.arange(n_groups) % max(1, cfg.hybrid_shared_blocks)
+
+    def group(h, c):
+        gp, k_c, v_c, conv_g, state_g, bid = c
+        sp = _select_shared(params["shared"], bid)
+        z = jnp.concatenate([h, h0], axis=-1) @ sp["concat_proj"]
+        zn = L.norm(cfg, z, sp, "ln1")
+        attn, k_c, v_c = L.attention_chunk(cfg, zn, sp, k_c, v_c,
+                                           positions, start)
+        z = z + attn
+        z = z + L.mlp_block(cfg, L.norm(cfg, z, sp, "ln2"), sp)
+        h = h + z
+
+        def inner(hh, ic):
+            lp, cv, st = ic
+            y, cv, st = S.ssm_block_chunk(
+                cfg, L.norm(cfg, hh, lp, "ln1"), lp, cv, st)
+            return hh + y, (cv, st)
+        h, (conv_g, state_g) = jax.lax.scan(inner, h, (gp, conv_g, state_g))
+        return h, {"k": k_c, "v": v_c, "conv": conv_g, "state": state_g}
+
+    x, new = jax.lax.scan(
+        group, x, (stacked, cache["k"], cache["v"], conv, state, block_ids))
+    out = {
+        "k": new["k"], "v": new["v"],
+        "conv": new["conv"].reshape((cfg.n_layers,) + new["conv"].shape[2:]),
+        "state": new["state"].reshape((cfg.n_layers,) + new["state"].shape[2:]),
+    }
+    return lm_head(cfg, params, x[:, -1:]), out
+
+
+# ==========================================================================
 # Decode: one token, cache update
 # ==========================================================================
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,

@@ -169,6 +169,46 @@ def ssm_block(cfg: ModelConfig, x: jax.Array, p: dict, h0=None, mm=matmul):
     return mm(y, p["ssm_out"]), final
 
 
+def ssm_block_chunk(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state,
+                    mm=matmul):
+    """Multi-token Mamba-2 continuation (chunked prefill).
+
+    x: [B,n,d] chunk of hidden states; conv_cache: [B,W-1,conv_dim] (the
+    trailing pre-conv inputs of everything before the chunk — zeros at the
+    sequence start, where this reduces exactly to `_causal_conv`'s zero
+    padding); state: [B,H,P,S] SSD state entering the chunk.  Returns
+    (y [B,n,d], conv_cache, state) with both carries advanced past the
+    chunk, so feeding a prompt through in arbitrary chunk sizes yields the
+    same final carries as one full-sequence `ssm_block` pass.
+    """
+    bsz, t, _ = x.shape
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    g, s = cfg.ssm_n_groups, cfg.ssm_state
+    width = cfg.ssm_conv_width
+    z, xs, bc, dt = _project_in(cfg, x, p, mm)
+    xbc = jnp.concatenate([xs, bc], axis=-1)               # [B,n,C] pre-conv
+    window = jnp.concatenate([conv_cache, xbc], axis=1)    # [B,W-1+n,C]
+    new_conv = window[:, -(width - 1):]
+    # Causal depthwise conv with history: out[j] = sum_i w[i]·window[j+i]
+    # (w[W-1] multiplies the current token — same stencil as decode).
+    conv_out = sum(window[:, i: i + t] * p["conv_w"][i] for i in range(width))
+    xbc_conv = jax.nn.silu(conv_out)
+    x_ssm, b_mat, c_mat = jnp.split(
+        xbc_conv, [d_inner, d_inner + g * s], axis=-1)
+    x_ssm = x_ssm.reshape(bsz, t, nh, cfg.ssm_head_dim)
+    b_mat = b_mat.reshape(bsz, t, g, s)
+    c_mat = c_mat.reshape(bsz, t, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked(x_ssm, dt, a, b_mat, c_mat, h0=state,
+                           chunk=cfg.ssm_chunk)
+    y = y + x_ssm * p["D"][None, None, :, None]
+    y = y.reshape(bsz, t, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm_w"], cfg.norm_eps)
+    return mm(y, p["ssm_out"]), new_conv, state
+
+
 def ssm_block_decode(cfg: ModelConfig, x: jax.Array, p: dict, conv_cache, state,
                      mm=matmul):
     """Single-token Mamba-2 step.

@@ -296,8 +296,14 @@ class RuntimeController:
 
     # -- the hook ----------------------------------------------------------
     def on_step(self, sample: StepSample, cache=None,
-                params: dict[str, Any] | None = None) -> dict[str, Any] | None:
+                params: dict[str, Any] | None = None,
+                migration_used: int = 0) -> dict[str, Any] | None:
         """Record one step and run the control actions.
+
+        ``migration_used`` is page movement the engine already performed
+        this step outside the migrator (the scheduler's tier-demotion
+        preemptions); it draws down the migrator's per-step budget so
+        preemption and migration share one movement allowance.
 
         Returns the params tree — repartitioned when a re-plan fired,
         otherwise the identical object that was passed in.
@@ -324,7 +330,7 @@ class RuntimeController:
         self.stats.window_max = max(self.stats.window_max, self.window)
 
         if cache is not None:
-            rep = self.migrator.step(cache)
+            rep = self.migrator.step(cache, budget_used=migration_used)
             self.stats.promoted_pages += rep.promoted
             self.stats.demoted_pages += rep.demoted
 

@@ -47,9 +47,16 @@ class Migrator:
         self.headroom = headroom
         self.total = MigrationReport()
 
-    def step(self, cache: PagedTieredCache) -> MigrationReport:
+    def step(self, cache: PagedTieredCache,
+             budget_used: int = 0) -> MigrationReport:
+        """One bounded migration pass.  ``budget_used`` is page movement
+        the engine already spent this step outside the migrator — the
+        scheduler's tier-demotion preemptions — which draws down the same
+        per-step budget (both cost the same pool-copy bandwidth), so a
+        preemption-heavy step migrates less instead of moving more total
+        bytes than the budget promises."""
         rep = MigrationReport()
-        budget = self.pages_per_step
+        budget = max(0, self.pages_per_step - max(0, budget_used))
         heat = cache.heat
         while budget > 0:
             remote_owned = cache.owned_pages(REMOTE)

@@ -5,6 +5,23 @@ requests are admitted into any free slot (no alignment requirement — every
 slot tracks its own KV length), decode steps take the per-slot ``lens``
 vector, and finished requests free their slot for the next queued request.
 
+Admission and prefill slicing are delegated to a pluggable scheduler
+(`repro.frontend.scheduler`): the FCFS default reproduces the classic
+whole-prompt submit/run loop exactly, while the priority and SLO-aware
+(earliest-deadline-first) schedulers add **chunked prefill** — long
+prompts split into fixed per-step token budgets (`models.prefill_chunk`
+against a private per-request cache) interleaved with decode steps, so
+the telemetry/AIMD plane sees a smooth prefill/decode mix — and
+**tier-demotion preemption**: on KV page pressure a victim's local pages
+are demoted to the remote pool (`PagedTieredCache.demote_slot_pages`,
+budget shared with the live migrator) and the victim keeps decoding
+through the direct-access paged kernel, exact tokens, no recompute.
+Scheduling never changes any request's tokens — only when they are
+produced; per-request lifecycle metrics (queue delay, TTFT, end-to-end
+latency, per-class SLO attainment — `frontend.metrics`) fold into
+`EngineStats`, and trace replay runs on a modeled clock so scheduler
+comparisons are deterministic.
+
 Offloading is planned once at startup (OffloadEngine) and realized through
 the unified tiering API: ``TieringPlan.partition`` wraps every registered
 operand (`models.registry`) in a `TieredArray` — dense/VLM linears, MoE
@@ -63,6 +80,15 @@ from repro.core import engine as offload_engine
 from repro.core import multicast
 from repro.core.ebmodel import WorkloadSpec
 from repro.core.hardware import HardwareSpec, MeshSpec, TPU_V5E
+from repro.frontend.metrics import (
+    Clock,
+    ModeledClock,
+    RequestRecord,
+    WallClock,
+    modeled_step_seconds,
+    percentile,
+)
+from repro.frontend.scheduler import Scheduler, get_scheduler
 from repro.models import model as M
 from repro.runtime.controller import RuntimeController
 from repro.runtime.telemetry import (
@@ -71,7 +97,7 @@ from repro.runtime.telemetry import (
     weight_tier_bytes,
 )
 from repro.serving import tiered_decode as TD
-from repro.serving.paged_cache import PagedTieredCache
+from repro.serving.paged_cache import LOCAL, PagedTieredCache
 
 # Families served through the direct-access kernel path ("encoder" has no
 # decode step; everything else goes tiered).
@@ -88,6 +114,28 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # -- scheduling metadata (frontend) --------------------------------
+    cls: str = "default"                   # tenant / priority class name
+    priority: int = 0                      # higher = more urgent
+    arrival_s: float | None = None         # trace arrival (clock seconds);
+    #                                        None = ready at submit
+    slo_ttft_s: float | None = None        # TTFT SLO (None = best effort)
+    t_admit: float = 0.0                   # first prefill chunk scheduled
+    preemptions: int = 0                   # tier-demotion preemptions suffered
+
+
+@dataclasses.dataclass
+class PrefillState:
+    """An in-flight chunked prefill: the request holds a private batch-1
+    cache that successive `models.prefill_chunk` calls fill; on the last
+    chunk the cache is committed to the slot (paged pools / reference
+    cache) and the request joins the decode batch."""
+    req: Request
+    cache: dict[str, jax.Array] | None = None   # lazy: only chunked prefills
+    #                                             allocate it (whole-prompt
+    #                                             admissions use M.prefill's)
+    pos: int = 0                           # prompt tokens processed so far
+    logits: jax.Array | None = None        # last chunk's final-position logits
 
 
 @dataclasses.dataclass
@@ -104,23 +152,56 @@ class EngineStats:
     demoted_pages: int = 0                 # migration: local->remote
     replans: int = 0                       # phase-aware re-planner firings
     final_window: int = 0                  # in-flight DMA window after the run
+    prefill_chunks: int = 0                # continuation chunks (beyond 1st)
+    preemptions: int = 0                   # tier-demotion preemption events
+    preempt_demoted_pages: int = 0         # pages demoted by preemptions
     ttfts: list[float] = dataclasses.field(default_factory=list)
     # per-request time-to-first-token (t_first - t_submit), appended at admit
+    queue_delays: list[float] = dataclasses.field(default_factory=list)
+    # per-request queue delay (t_admit - t_submit), appended at admission
+    e2e_latencies: list[float] = dataclasses.field(default_factory=list)
+    # per-request end-to-end latency (t_done - t_submit), appended at finish
+    requests: list = dataclasses.field(default_factory=list)
+    # per-request lifecycle records (frontend.metrics.RequestRecord)
 
     @property
     def tpot(self) -> float:
         return self.decode_time / max(1, self.decode_steps)
 
-    def _ttft_pct(self, q: float) -> float:
-        return float(np.percentile(self.ttfts, q)) if self.ttfts else 0.0
+    @staticmethod
+    def _pct(values: list[float], q: float) -> float:
+        return percentile(values, q)
 
     @property
     def ttft_p50(self) -> float:
-        return self._ttft_pct(50)
+        return self._pct(self.ttfts, 50)
 
     @property
     def ttft_p95(self) -> float:
-        return self._ttft_pct(95)
+        return self._pct(self.ttfts, 95)
+
+    @property
+    def queue_delay_p50(self) -> float:
+        return self._pct(self.queue_delays, 50)
+
+    @property
+    def queue_delay_p95(self) -> float:
+        return self._pct(self.queue_delays, 95)
+
+    @property
+    def e2e_p50(self) -> float:
+        return self._pct(self.e2e_latencies, 50)
+
+    @property
+    def e2e_p95(self) -> float:
+        return self._pct(self.e2e_latencies, 95)
+
+    def slo_report(self) -> dict:
+        """Per-tenant-class SLO attainment + latency percentiles
+        (`frontend.metrics.slo_report` over the request records)."""
+        from repro.frontend.metrics import slo_report
+
+        return slo_report(self.requests)
 
 
 class ServingEngine:
@@ -140,11 +221,31 @@ class ServingEngine:
         runtime: RuntimeController | None = None,
         mesh: jax.sharding.Mesh | None = None,
         mesh_axis: str | None = None,
+        scheduler: str | Scheduler | None = None,
+        prefill_chunk: int | None = None,
+        clock: Clock | None = None,
     ):
+        """``scheduler`` selects the serving frontend policy — a name
+        ('fcfs' | 'priority' | 'slo'), a `frontend.scheduler.Scheduler`
+        instance, or None for the default FCFS whole-prompt behaviour
+        (identical to the pre-frontend engine).  ``prefill_chunk`` caps
+        the prompt tokens prefilled per step (chunked prefill; only
+        applies when a scheduler name is given — an instance carries its
+        own chunk budget).  ``clock`` is the lifecycle timestamp source:
+        wall time by default, or a `frontend.metrics.ModeledClock` that
+        the engine advances by the analytical step latency (trace replay
+        and scheduler comparisons run on the modeled clock)."""
         self.cfg = cfg
+        self.hw = hw
         self.max_batch = max_batch
         self.max_len = max_len
         self.page_size = page_size
+        self.clock = clock if clock is not None else WallClock()
+        if isinstance(scheduler, Scheduler):
+            self.scheduler = scheduler
+        else:
+            kw = {"chunk_tokens": prefill_chunk} if prefill_chunk else {}
+            self.scheduler = get_scheduler(scheduler or "fcfs", **kw)
         self.use_kernels = use_kernels and cfg.family in TIERED_FAMILIES
         self.mesh = mesh
         self.mesh_axis = (mesh_axis or mesh.axis_names[-1]) if mesh is not None else None
@@ -193,14 +294,23 @@ class ServingEngine:
         else:
             # SSM (no KV cache) or the reference fallback path.
             self.cache = M.init_cache(cfg, max_batch, max_len, dtype)
+        self._dtype = dtype
+        self._t0 = self.clock.now()        # clock origin trace arrivals anchor to
         self.lens = np.zeros(max_batch, dtype=np.int32)     # per-slot kv length
         self.active: list[Request | None] = [None] * max_batch
-        self.queue: deque[Request] = deque()
+        self.prefilling: dict[int, PrefillState] = {}   # slot -> chunked prefill
         self.stats = EngineStats()
         self.stats.final_window = self.window
         self._next_tok = np.zeros((max_batch, 1), dtype=np.int32)
         self._prefill_calls_step = 0       # prefill passes in the last _admit
+        self._preempt_moved_step = 0       # preemption demotions this step
         self._step_params: dict[str, Any] | None = None  # per-step fetch cache
+
+    @property
+    def queue(self) -> deque[Request]:
+        """Admissible requests, in arrival order (the scheduler's ready
+        queue; future trace arrivals wait in its pending heap)."""
+        return self.scheduler.ready
 
     def _make_pcache(self, n_kv_layers: int, dtype) -> PagedTieredCache:
         cfg = self.cfg
@@ -226,52 +336,180 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.t_submit = time.time()
-        self.queue.append(req)
+        """Hand a request to the scheduler.  ``req.arrival_s`` is an
+        offset from engine start: it is anchored to this engine's clock
+        origin here, so a trace replays correctly on the modeled clock
+        (origin 0.0 — offsets pass through) *and* on the wall clock
+        (real-time replay: arrivals release as wall time reaches them),
+        instead of virtual offsets being compared against epoch time."""
+        now = self.clock.now()
+        if req.arrival_s is not None:
+            req.arrival_s = self._t0 + req.arrival_s
+        req.t_submit = now
+        self.scheduler.submit(req, now)
 
     def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.active) if r is None]
+        return [i for i, r in enumerate(self.active)
+                if r is None and i not in self.prefilling]
 
     def _admit(self) -> int:
-        """Prefill queued requests into free slots (one at a time — prompt
-        lengths vary; production would bucket them).  Returns the number of
-        prompt tokens prefetched (the telemetry prefill mix).
+        """One scheduling round: continue in-flight chunked prefills, then
+        admit ready requests into free slots, all within the scheduler's
+        per-step prompt-token budget.  Returns the number of prompt tokens
+        prefetched (the telemetry prefill mix).
 
         Prefill runs directly over the tiered params (operand dispatch in
         `models.layers`): remote weight partitions are streamed, never
-        concatenated back into HBM.  A request whose prefill-produced first
-        token is EOS (or whose budget is a single token) finishes here
-        without occupying a slot or burning decode steps."""
+        concatenated back into HBM.  The FCFS default (no chunk budget)
+        prefills each prompt whole in admission order — exactly the
+        pre-frontend behaviour.  A request whose prefill-produced first
+        token is EOS (or whose budget is a single token) finishes at its
+        last chunk without occupying a slot or burning decode steps."""
         prefill_tokens = 0
         self._prefill_calls_step = 0
-        free = self._free_slots()
-        fi = 0
-        while fi < len(free) and self.queue:
-            slot = free[fi]
-            req = self.queue.popleft()
-            prefill_tokens += len(req.prompt)
-            self._prefill_calls_step += 1
-            t0 = time.time()
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = M.prefill(self.cfg, self._fetched_params(),
-                                       {"tokens": tokens}, max_len=self.max_len)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.out_tokens.append(nxt)
-            self.stats.generated_tokens += 1
-            req.t_first = time.time()
-            self.stats.prefill_time += req.t_first - t0
-            self.stats.ttfts.append(req.t_first - req.t_submit)
-            if nxt == req.eos_id or req.max_new_tokens <= 1:
-                req.t_done = req.t_first
-                self.stats.served += 1
-                continue                       # slot stays free for the next
-            self._write_slot_cache(slot, cache1, len(req.prompt))
-            self.lens[slot] = len(req.prompt)
-            self._next_tok[slot, 0] = nxt
-            self.active[slot] = req
-            self._note_occupancy()
-            fi += 1
+        sched = self.scheduler
+        now = self.clock.now()
+        sched.release(now)
+        qd_ema = (self.runtime.telemetry.queue_depth
+                  if self.runtime is not None else float(len(sched.ready)))
+        budget = sched.chunk_budget(qd_ema)
+        left = budget                      # None = unbounded (whole prompts)
+        # 1) continue in-flight chunked prefills, scheduler order
+        order = sched.order_prefilling(
+            [(s, ps.req) for s, ps in self.prefilling.items()])
+        for slot in order:
+            if left is not None and left <= 0:
+                break
+            ps = self.prefilling[slot]
+            n = len(ps.req.prompt) - ps.pos
+            if left is not None:
+                n = min(n, left)
+                left -= n
+            prefill_tokens += n
+            self._run_prefill_chunk(slot, ps, n)
+        # 2) admit new requests into free slots
+        while sched.ready and (left is None or left > 0):
+            free = self._free_slots()
+            if not free:
+                break
+            req = sched.select(now)
+            slot = free[0]
+            req.t_admit = now
+            self.stats.queue_delays.append(req.t_admit - req.t_submit)
+            if self.pcache is not None and sched.preemptive:
+                self._maybe_preempt(req)
+            ps = PrefillState(req=req)
+            self.prefilling[slot] = ps
+            n = len(req.prompt)
+            if left is not None:
+                n = min(n, left)
+                left -= n
+            prefill_tokens += n
+            self._run_prefill_chunk(slot, ps, n)
         return prefill_tokens
+
+    def _run_prefill_chunk(self, slot: int, ps: PrefillState, n: int) -> None:
+        """Process `n` prompt tokens of the slot's in-flight prefill.  A
+        whole prompt in one chunk takes the classic `models.prefill` path;
+        continuations go through `models.prefill_chunk` against the
+        request's private cache.  The last chunk commits: first token
+        sampled from the chunk's final logits, cache written to the slot
+        (paged pools / reference cache), request joins the decode batch."""
+        req = ps.req
+        self._prefill_calls_step += 1
+        t0 = time.time()
+        chunk = jnp.asarray(req.prompt[ps.pos:ps.pos + n], jnp.int32)[None, :]
+        if ps.pos == 0 and n == len(req.prompt):
+            ps.logits, ps.cache = M.prefill(
+                self.cfg, self._fetched_params(), {"tokens": chunk},
+                max_len=self.max_len)
+        else:
+            if ps.cache is None:           # first chunk of a split prompt
+                ps.cache = M.init_cache(self.cfg, 1, self.max_len, self._dtype)
+            ps.logits, ps.cache = M.prefill_chunk(
+                self.cfg, self._fetched_params(), ps.cache, chunk, ps.pos)
+            self.stats.prefill_chunks += 1
+        ps.pos += n
+        self.stats.prefill_time += time.time() - t0
+        self._clock_tick_prefill(n)
+        if ps.pos < len(req.prompt):
+            return
+        del self.prefilling[slot]
+        nxt = int(jnp.argmax(ps.logits[0, -1]))
+        req.out_tokens.append(nxt)
+        self.stats.generated_tokens += 1
+        req.t_first = self.clock.now()
+        self.stats.ttfts.append(req.t_first - req.t_submit)
+        if nxt == req.eos_id or req.max_new_tokens <= 1:
+            self._finish_request(req)      # slot stays free for the next
+            return
+        self._write_slot_cache(slot, ps.cache, len(req.prompt))
+        self.lens[slot] = len(req.prompt)
+        self._next_tok[slot, 0] = nxt
+        self.active[slot] = req
+        self._note_occupancy()
+
+    def _finish_request(self, req: Request) -> None:
+        req.t_done = self.clock.now()
+        self.stats.served += 1
+        self.stats.e2e_latencies.append(req.t_done - req.t_submit)
+        self.stats.requests.append(RequestRecord(
+            rid=req.rid, cls=req.cls, priority=req.priority,
+            prompt_tokens=len(req.prompt), output_tokens=len(req.out_tokens),
+            queue_delay=req.t_admit - req.t_submit,
+            ttft=req.t_first - req.t_submit,
+            e2e=req.t_done - req.t_submit,
+            preemptions=req.preemptions, slo_ttft_s=req.slo_ttft_s))
+
+    def _maybe_preempt(self, incoming: Request) -> None:
+        """Tier-demotion preemption: when the incoming request's prompt
+        pages exceed the local pool's free pages, ask the scheduler for a
+        victim and demote (up to) the shortfall of its local KV pages to
+        the remote pool.  The victim keeps decoding through the
+        direct-access paged kernel — exact tokens, no recompute — while
+        the freed local pages receive the (hot) incoming prompt."""
+        need = -(-(len(incoming.prompt) + 1) // self.page_size)
+        shortfall = need - len(self.pcache.free[LOCAL])
+        if shortfall <= 0:
+            return
+        candidates = [(slot, r) for slot, r in enumerate(self.active)
+                      if r is not None]
+        victim = self.scheduler.pick_victim(candidates, incoming)
+        if victim is None:
+            return
+        moved = self.pcache.demote_slot_pages(victim, max_pages=shortfall)
+        if not moved:
+            return
+        self.active[victim].preemptions += 1
+        self.stats.preemptions += 1
+        self.stats.preempt_demoted_pages += moved
+        self._preempt_moved_step += moved
+
+    # -- modeled clock ------------------------------------------------------
+    def _clock_tick_prefill(self, n_tokens: int) -> None:
+        """Advance a virtual clock by the analytical cost of one prefill
+        chunk (no-op on the wall clock), before TTFT is stamped."""
+        if not isinstance(self.clock, ModeledClock) or not n_tokens:
+            return
+        self.clock.advance(modeled_step_seconds(
+            self.cfg, self.hw, self.plan.op_ratios, prefill_tokens=n_tokens))
+
+    def _clock_tick_decode(self, active: np.ndarray) -> None:
+        """Advance a virtual clock by the analytical cost of one decode
+        step over the active slots, pricing the KV read off the *live*
+        page residency — so spills, migration and tier-demotion
+        preemptions are visible to the modeled latencies."""
+        n_active = int(active.sum())
+        if not isinstance(self.clock, ModeledClock) or not n_active:
+            return
+        kv_local = kv_remote = 0.0
+        if self.pcache is not None:
+            kv_local, kv_remote = self.pcache.attended_bytes(self.lens, active)
+        self.clock.advance(modeled_step_seconds(
+            self.cfg, self.hw, self.plan.op_ratios,
+            decode_slots=n_active,
+            mean_kv_len=float(self.lens[active].mean()),
+            kv_local_bytes=kv_local, kv_remote_bytes=kv_remote))
 
     def _fetched_params(self) -> dict[str, Any]:
         """The step's fetch-once broadcast of the sharded host partitions
@@ -333,6 +571,7 @@ class ServingEngine:
         telemetry sample is reported after the compute."""
         t_step = time.time()
         self._step_params = None           # new step, new fetch
+        self._preempt_moved_step = 0
         if self.runtime is not None:
             self.window = self.runtime.window
         prefill_tokens = self._admit()
@@ -340,6 +579,13 @@ class ServingEngine:
             if prefill_tokens:
                 self._runtime_step(t_step, prefill_tokens,
                                    np.zeros(self.max_batch, dtype=bool))
+            elif not self.prefilling and self.scheduler.waiting:
+                # Idle but a trace arrival is pending: fast-forward the
+                # modeled clock to it (no-op on the wall clock, which
+                # just polls until the arrival time comes to pass).
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None:
+                    self.clock.advance(max(0.0, nxt - self.clock.now()))
             return
         active = np.array([r is not None for r in self.active])
         if self.pcache is not None:
@@ -391,6 +637,7 @@ class ServingEngine:
         logits.block_until_ready()
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
+        self._clock_tick_decode(active)
         self._runtime_step(t_step, prefill_tokens, active)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
         for slot, req in enumerate(self.active):
@@ -404,8 +651,7 @@ class ServingEngine:
                     or tok == req.eos_id
                     or self.lens[slot] >= self.max_len - 1)
             if done:
-                req.t_done = time.time()
-                self.stats.served += 1
+                self._finish_request(req)
                 self.active[slot] = None
                 self.lens[slot] = 0
                 if self.pcache is not None:
@@ -448,8 +694,9 @@ class ServingEngine:
             remote_bytes=sum(link_b),
             window=self.window,
             remote_bytes_per_link=tuple(link_b) if self.n_links > 1 else None)
-        new_params = self.runtime.on_step(sample, cache=self.pcache,
-                                          params=self.params)
+        new_params = self.runtime.on_step(
+            sample, cache=self.pcache, params=self.params,
+            migration_used=self._preempt_moved_step)
         if new_params is not None and new_params is not self.params:
             if self.mesh is not None:
                 from repro.launch.sharding import shard_tiered_params
@@ -497,7 +744,8 @@ class ServingEngine:
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.queue or any(r is not None for r in self.active)) and steps < max_steps:
+        while (self.scheduler.waiting or self.prefilling
+               or any(r is not None for r in self.active)) and steps < max_steps:
             self.step()
             steps += 1
         return self.stats

@@ -285,6 +285,47 @@ class PagedTieredCache:
             self.promotions += len(ids)
         return len(ids)
 
+    def slot_pages(self, slot: int, tier: int) -> list[int]:
+        """Pool indices of `slot`'s pages currently resident in `tier`,
+        in sequence order (head of the sequence first)."""
+        n = int(self.n_pages[slot])
+        return [int(self.table[slot, p]) for p in range(n)
+                if int(self.tier[slot, p]) == tier]
+
+    def slot_residency(self, slot: int, length: int | None = None) -> dict:
+        """Partial-sequence residency query: how much of `slot`'s cache
+        lives in each tier.  With `length` only the pages covering the
+        first `length` tokens are counted (the portion a decode step at
+        that kv length actually attends)."""
+        n = int(self.n_pages[slot])
+        if length is not None:
+            n = min(n, -(-int(length) // self.page_size))
+        tiers = self.tier[slot, :n]
+        return {
+            "pages": n,
+            "local_pages": int((tiers == LOCAL).sum()),
+            "remote_pages": int((tiers == REMOTE).sum()),
+            "local_tokens": int((tiers == LOCAL).sum()) * self.page_size,
+        }
+
+    def demote_slot_pages(self, slot: int, max_pages: int | None = None) -> int:
+        """Tier-demotion preemption: move up to `max_pages` of `slot`'s
+        local pages to the remote pool (coldest first, so the sequence
+        tail — rewritten every step — is the last to go), freeing local
+        pages for an incoming request while `slot` keeps decoding through
+        the direct-access paged kernel.  Returns the number of pages
+        moved (0 when the slot holds no local pages or the remote pool is
+        full); counted as demotions, not spills."""
+        owned = self.slot_pages(slot, LOCAL)
+        if not owned:
+            return 0
+        budget = len(owned) if max_pages is None else max(0, int(max_pages))
+        budget = min(budget, len(self.free[REMOTE]))
+        if budget <= 0:
+            return 0
+        victims = self.heat.ranked(LOCAL, owned, hottest_first=False)[:budget]
+        return self.move_pages(LOCAL, REMOTE, victims)
+
     # -- per-step temperature bookkeeping ---------------------------------
     def touch_step(self, lens: np.ndarray, active: np.ndarray) -> None:
         """Record one decode step's page accesses in the heat histogram.
