@@ -1,9 +1,11 @@
 """Serving benchmark: static vs adaptive vs mesh-sharded engine, plus
 trace-driven scheduler scenarios.
 
-Runs the end-to-end serving driver three ways — the static plan, the
-adaptive runtime, and (in a subprocess with a forced multi-device host
-platform) the mesh-sharded engine — and emits both the CSV rows the
+Runs the end-to-end serving driver four ways — the static plan, the
+adaptive runtime, a chaos run with a mid-trace HBM shrink (the
+never-OOM elastic-degradation acceptance: failed_requests must be 0),
+and (in a subprocess with a forced multi-device host platform) the
+mesh-sharded engine — and emits both the CSV rows the
 benchmark harness prints and the machine-readable ``BENCH_serving.json``
 payload (``benchmarks.run --json-out``), so the serving perf trajectory
 (tokens/s, TTFT percentiles, achieved bandwidth per tier, static vs
@@ -136,8 +138,13 @@ def collect() -> tuple[list[Row], dict]:
 
     static = serve_main(ARGS + ["--bench-json", ""])
     adaptive = serve_main(ARGS + ["--adaptive", "--bench-json", ""])
+    # Chaos row: same workload with a mid-trace HBM shrink to 20% — the
+    # never-OOM acceptance; failed_requests must stay 0 while the elastic
+    # machinery absorbs the pressure (demotions + host-pool growth).
+    chaos = serve_main(ARGS + ["--hbm-shrink", "2:0.2", "--bench-json", ""])
     sharded = _sharded_report(SHARDED_DEVICES)
-    runs: list[tuple[str, dict]] = [("static", static), ("adaptive", adaptive)]
+    runs: list[tuple[str, dict]] = [("static", static), ("adaptive", adaptive),
+                                    ("chaos_shrink", chaos)]
     if sharded is not None:
         runs.append((f"sharded_{SHARDED_DEVICES}dev", sharded))
     rows: list[Row] = []
@@ -156,6 +163,12 @@ def collect() -> tuple[list[Row], dict]:
                      bw["local"]["achieved"] / 1e9))
         rows.append(("serving_achieved_remote_bw_gbs", 0.0,
                      bw["remote"]["achieved"] / 1e9))
+    elastic = chaos.get("elastic", {})
+    rows.append(("serving_chaos_failed_requests", 0.0,
+                 float(chaos.get("failed_requests", 0))))
+    rows.append(("serving_chaos_elastic_events", 0.0, float(
+        elastic.get("cache_full_caught", 0) + elastic.get("shrink_events", 0)
+        + elastic.get("remote_grown_pages", 0))))
     if sharded is not None and "mesh_traffic" in sharded:
         mt = sharded["mesh_traffic"]
         per_link = max(mt["per_link_bytes"]) if mt["per_link_bytes"] else 0.0
@@ -164,7 +177,8 @@ def collect() -> tuple[list[Row], dict]:
                      naive / per_link if per_link else 0.0))
     scenarios = _scenario_reports()
     rows.extend(_scenario_rows(scenarios))
-    report = {"static": static, "adaptive": adaptive, "scenarios": scenarios}
+    report = {"static": static, "adaptive": adaptive, "chaos": chaos,
+              "scenarios": scenarios}
     if sharded is not None:
         report["sharded"] = sharded
     return rows, report

@@ -122,6 +122,11 @@ class RequestRecord:
     e2e: float                      # done − submit
     preemptions: int                # tier-demotion preemptions suffered
     slo_ttft_s: float | None        # the class's TTFT SLO (None = best effort)
+    admitted_degraded: bool = False
+    # admitted while the engine health state was not 'healthy' (elastic
+    # degradation backoff let it through as a recovery trickle) — these
+    # requests' latencies price the degraded window, so reports can
+    # separate them from steady-state admissions
 
     @property
     def slo_ok(self) -> bool | None:
@@ -155,5 +160,6 @@ def slo_report(records: list[RequestRecord]) -> dict:
             "queue_delay_p95": percentile([r.queue_delay for r in rs], 95),
             "e2e_p95": percentile([r.e2e for r in rs], 95),
             "preemptions": sum(r.preemptions for r in rs),
+            "degraded_admissions": sum(r.admitted_degraded for r in rs),
         }
     return out

@@ -115,6 +115,20 @@ class Scheduler:
         """Per-step prefill token budget (None = whole prompts)."""
         return self.chunk_tokens
 
+    def admission_quota(self, health: str) -> int | None:
+        """Max *new* admissions this step under the engine health state
+        (elastic-degradation backoff, every policy): ``spilling`` sheds
+        (0 — the engine is demoting pages to recover headroom and a new
+        prompt would allocate straight into the pressure), ``recovering``
+        trickles (1 per step), ``healthy`` is unbounded (None).  In-flight
+        chunked prefills always continue — backoff gates admission, not
+        work already holding pages."""
+        if health == "spilling":
+            return 0
+        if health == "recovering":
+            return 1
+        return None
+
     def pick_victim(self, candidates: list[tuple[int, Request]],
                     incoming: Request) -> int | None:
         """Slot whose KV pages should be demoted to admit ``incoming``

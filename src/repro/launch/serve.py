@@ -82,6 +82,11 @@ def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
             "local_pages_hwm": stats.local_pages_hwm,
             "remote_pages_hwm": stats.remote_pages_hwm,
         },
+        # Elastic degradation (never-OOM): failed_requests is asserted ==0
+        # by the CI chaos-smoke job; the health block records how the
+        # engine degraded instead of failing.
+        "failed_requests": stats.failed_requests,
+        "elastic": engine.health.report(),
         "window": {"static": engine.plan.window.n_inflight,
                    "final": stats.final_window},
     }
@@ -147,7 +152,22 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--slo-ttft-ms", type=float, default=None,
                     help="override the interactive class's TTFT SLO for "
                          "synthesized traces (ms, modeled clock)")
+    ap.add_argument("--hbm-shrink", default=None, metavar="STEP:FRAC",
+                    help="chaos event: at decode step STEP, shrink the "
+                         "modeled HBM page budget to FRAC of the local pool "
+                         "(e.g. 6:0.3).  The engine must degrade — demote, "
+                         "re-plan to a higher offload ratio, shed admissions "
+                         "— and finish with zero failed requests")
     args = ap.parse_args(argv)
+    shrink = None
+    if args.hbm_shrink:
+        try:
+            step_s, frac_s = args.hbm_shrink.split(":")
+            shrink = (int(step_s), float(frac_s))
+        except ValueError:
+            raise SystemExit(
+                f"--hbm-shrink expects STEP:FRAC (e.g. 6:0.3), "
+                f"got {args.hbm_shrink!r}") from None
     if args.bench_json is None and args.adaptive:
         args.bench_json = "BENCH_serving.json"
 
@@ -185,6 +205,10 @@ def main(argv: list[str] | None = None) -> dict:
         adaptive=args.adaptive, mesh=mesh,
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
         clock=ModeledClock() if trace is not None else None)
+    if shrink is not None:
+        engine.schedule_hbm_shrink(*shrink)
+        print(f"chaos: HBM shrink to {shrink[1]:.0%} of the local pool "
+              f"at decode step {shrink[0]}")
 
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
@@ -227,6 +251,13 @@ def main(argv: list[str] | None = None) -> dict:
         print(f"frontend: prefill chunks {stats.prefill_chunks} | "
               f"preemptions {stats.preemptions} "
               f"({stats.preempt_demoted_pages} pages demoted)")
+    if engine.health.counters.events:
+        print(f"elastic: health {stats.health} | failed requests "
+              f"{stats.failed_requests} | CacheFull caught "
+              f"{stats.cache_full_caught} | demoted {stats.elastic_demoted_pages} "
+              f"pages | remote grown {stats.remote_grown_pages} pages | "
+              f"shed steps {stats.shed_steps} | "
+              f"elastic replans {stats.elastic_replans}")
     slo = stats.slo_report()
     if trace is not None and slo:
         for cls, rep in slo.items():

@@ -41,6 +41,7 @@ from repro.core.hardware import HardwareSpec
 from repro.runtime import migration as migration_mod
 from repro.runtime import replan as replan_mod
 from repro.runtime.telemetry import StepSample, Telemetry
+from repro.serving.paged_cache import CacheFull
 
 
 class AIMDController:
@@ -330,7 +331,13 @@ class RuntimeController:
         self.stats.window_max = max(self.stats.window_max, self.window)
 
         if cache is not None:
-            rep = self.migrator.step(cache, budget_used=migration_used)
+            try:
+                rep = self.migrator.step(cache, budget_used=migration_used)
+            except CacheFull:
+                # Degraded mode: a move_pages destination filled up under
+                # this very step's pressure — skip the pass rather than
+                # kill the run; the engine's elastic drain restores room.
+                rep = migration_mod.MigrationReport()
             self.stats.promoted_pages += rep.promoted
             self.stats.demoted_pages += rep.demoted
 
@@ -341,6 +348,24 @@ class RuntimeController:
             if params is not None:
                 params, _ = replan_mod.repartition(
                     params, new_plan, align=self.align)
+        return params
+
+    def elastic_replan(self, local_fraction: float,
+                       params: dict[str, Any] | None) -> dict[str, Any] | None:
+        """Elastic degradation hook: the engine's local page budget shrank
+        to ``local_fraction`` of what the plan assumed — re-solve the
+        greedy allocator at the correspondingly *higher* offload ratio
+        (`Replanner.force_ratio`) and incrementally repartition.  Returns
+        the (possibly new) params tree; the identical object when the
+        ratio would not increase."""
+        new_plan = self.replanner.force_ratio(local_fraction, self.telemetry)
+        if new_plan is None:
+            return params
+        self.stats.replans += 1
+        self.plan = new_plan
+        if params is not None:
+            params, _ = replan_mod.repartition(
+                params, new_plan, align=self.align)
         return params
 
     def report(self) -> dict:

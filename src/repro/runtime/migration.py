@@ -58,13 +58,18 @@ class Migrator:
         rep = MigrationReport()
         budget = max(0, self.pages_per_step - max(0, budget_used))
         heat = cache.heat
+        # Effective availability: `local_free` is the free list clipped by
+        # the cache's elastic local limit, so under a shrunken budget the
+        # migrator neither promotes into seized pages nor reads a deep
+        # free list as headroom it does not actually have.  At the default
+        # (full) limit this is exactly `len(cache.free[LOCAL])`.
         while budget > 0:
             remote_owned = cache.owned_pages(REMOTE)
             local_owned = cache.owned_pages(LOCAL)
             # Demote-for-headroom: keep the local free list deep enough
             # that tail allocation never hits the synchronous spill path.
             if (self.headroom > 0 and local_owned
-                    and len(cache.free[LOCAL]) < self.headroom
+                    and cache.local_free < self.headroom
                     and cache.free[REMOTE]):
                 cold = heat.coldest(LOCAL, local_owned)
                 cache.move_pages(LOCAL, REMOTE, [cold])
@@ -74,7 +79,7 @@ class Migrator:
             if not remote_owned:
                 break
             hot = heat.hottest(REMOTE, remote_owned)
-            if len(cache.free[LOCAL]) > self.headroom:
+            if cache.local_free > self.headroom:
                 # Promote into free local pages beyond the allocation
                 # headroom (never into the last `headroom` free pages).
                 cache.move_pages(REMOTE, LOCAL, [hot])

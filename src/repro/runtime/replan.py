@@ -110,6 +110,43 @@ class Replanner:
         self._last_replan_step = telemetry.total_steps
         return new
 
+    def force_ratio(self, local_fraction: float,
+                    telemetry: Telemetry) -> offload_engine.TieringPlan | None:
+        """Elastic re-plan at a *higher* offload ratio — the escape valve
+        for local-capacity pressure (the KV-offloading bottleneck analysis:
+        when HBM shrinks, a larger remote share is the right answer, not a
+        crash).
+
+        ``local_fraction`` is what remains of the local budget the current
+        plan assumed: the share that must live remote grows to
+        ``1 - (1 - r) * fraction``.  No drift gate, no warmup, no interval
+        — capacity pressure, not mix drift, triggers this path — but a
+        ratio that would not actually increase returns None (restoring a
+        budget never forces a re-plan downward; the drift path handles
+        optimization).  The solve runs on the telemetry-observed workload
+        and the same mesh, exactly like :meth:`maybe_replan`, so the
+        incremental :func:`repartition` realizes it bitwise-identically to
+        a fresh partition."""
+        frac = min(1.0, max(0.0, local_fraction))
+        new_ratio = min(1.0, 1.0 - (1.0 - self.plan.global_ratio) * frac)
+        if new_ratio <= self.plan.global_ratio + 1e-9:
+            return None
+        wl = self.observed_workload(telemetry)
+        page_size = (self.plan.kv_pages.page_size
+                     if self.plan.kv_pages is not None else 16)
+        mesh_spec = None
+        if self.plan.mesh is not None:
+            mesh_spec = hardware_mod.MeshSpec(
+                n_devices=self.plan.mesh.n_devices,
+                axis_name=self.plan.mesh.axis_name)
+        new = offload_engine.plan(
+            self.cfg, wl, self.hw, global_ratio=new_ratio,
+            kv_page_size=page_size, mesh=mesh_spec)
+        self.plan = new
+        self.replans += 1
+        self._last_replan_step = telemetry.total_steps
+        return new
+
 
 def repartition(
     params: dict[str, Any],

@@ -43,6 +43,8 @@ class StepSample:
     remote_bytes_per_link: tuple[float, ...] | None = None
     # per-host-link breakdown of remote_bytes under a serving mesh (one
     # entry per chip's link, summing to remote_bytes); None = single link
+    health: str = "healthy"            # engine health state this step
+    local_deficit: int = 0             # pages over the elastic local limit
 
     @property
     def tokens(self) -> int:
@@ -85,6 +87,7 @@ class Telemetry:
         self.total_steps = 0
         self.total_prefill_tokens = 0
         self.total_decode_tokens = 0
+        self.degraded_steps = 0        # steps sampled while not healthy
         self.total_local_bytes = 0.0
         self.total_remote_bytes = 0.0
         self._ema_local_bw: float | None = None
@@ -102,6 +105,8 @@ class Telemetry:
         self.total_decode_tokens += sample.decode_tokens
         self.total_local_bytes += sample.local_bytes
         self.total_remote_bytes += sample.remote_bytes
+        if sample.health != "healthy":
+            self.degraded_steps += 1
         dt = max(sample.duration_s, 1e-12)
         self._ema_local_bw = _ema(self._ema_local_bw, sample.local_bytes / dt, self.alpha)
         self._ema_remote_bw = _ema(self._ema_remote_bw, sample.remote_bytes / dt, self.alpha)
@@ -154,6 +159,7 @@ class Telemetry:
         """Machine-readable snapshot (BENCH_serving.json 'telemetry' key)."""
         return {
             "steps": self.total_steps,
+            "degraded_steps": self.degraded_steps,
             "prefill_tokens": self.total_prefill_tokens,
             "decode_tokens": self.total_decode_tokens,
             "prefill_fraction_ema": self.prefill_fraction,

@@ -91,13 +91,14 @@ from repro.frontend.metrics import (
 from repro.frontend.scheduler import Scheduler, get_scheduler
 from repro.models import model as M
 from repro.runtime.controller import RuntimeController
+from repro.runtime.health import HEALTHY, HealthMonitor
 from repro.runtime.telemetry import (
     StepSample,
     weight_link_bytes,
     weight_tier_bytes,
 )
 from repro.serving import tiered_decode as TD
-from repro.serving.paged_cache import LOCAL, PagedTieredCache
+from repro.serving.paged_cache import REMOTE, CacheFull, PagedTieredCache
 
 # Families served through the direct-access kernel path ("encoder" has no
 # decode step; everything else goes tiered).
@@ -122,6 +123,7 @@ class Request:
     slo_ttft_s: float | None = None        # TTFT SLO (None = best effort)
     t_admit: float = 0.0                   # first prefill chunk scheduled
     preemptions: int = 0                   # tier-demotion preemptions suffered
+    admitted_degraded: bool = False        # admitted while health != healthy
 
 
 @dataclasses.dataclass
@@ -155,6 +157,16 @@ class EngineStats:
     prefill_chunks: int = 0                # continuation chunks (beyond 1st)
     preemptions: int = 0                   # tier-demotion preemption events
     preempt_demoted_pages: int = 0         # pages demoted by preemptions
+    # -- elastic degradation (never-OOM): the engine catches CacheFull and
+    # degrades, so failed_requests stays 0 by construction — the counter
+    # exists so chaos runs can *assert* the guarantee, not hope for it.
+    failed_requests: int = 0
+    health: str = "healthy"                # final health state
+    cache_full_caught: int = 0             # CacheFull converted to demotion
+    elastic_demoted_pages: int = 0         # deficit-drain demotions
+    remote_grown_pages: int = 0            # emergency host-pool growth
+    shed_steps: int = 0                    # steps admissions were shed
+    elastic_replans: int = 0               # forced higher-ratio re-plans
     ttfts: list[float] = dataclasses.field(default_factory=list)
     # per-request time-to-first-token (t_first - t_submit), appended at admit
     queue_delays: list[float] = dataclasses.field(default_factory=list)
@@ -305,6 +317,11 @@ class ServingEngine:
         self._prefill_calls_step = 0       # prefill passes in the last _admit
         self._preempt_moved_step = 0       # preemption demotions this step
         self._step_params: dict[str, Any] | None = None  # per-step fetch cache
+        # Elastic degradation: the engine always owns a health monitor
+        # (runtime attached or not) — with no pressure it never leaves
+        # `healthy` and every counter stays zero.
+        self.health = HealthMonitor()
+        self._pending_shrink: tuple[int, float] | None = None
 
     @property
     def queue(self) -> deque[Request]:
@@ -387,15 +404,30 @@ class ServingEngine:
                 left -= n
             prefill_tokens += n
             self._run_prefill_chunk(slot, ps, n)
-        # 2) admit new requests into free slots
+        # 2) admit new requests into free slots, within the health quota
+        # (elastic-degradation backoff: shed while spilling, trickle while
+        # recovering).  An idle engine always admits — with nothing active
+        # there is no pressure for a new prompt to worsen, and a full shed
+        # would spin the run loop on a non-empty ready queue.
+        quota = sched.admission_quota(self.health.state)
+        if (quota == 0 and not self.prefilling
+                and not any(r is not None for r in self.active)):
+            quota = 1
+        shed = False
         while sched.ready and (left is None or left > 0):
+            if quota is not None and quota <= 0:
+                shed = True
+                break
             free = self._free_slots()
             if not free:
                 break
             req = sched.select(now)
             slot = free[0]
             req.t_admit = now
+            req.admitted_degraded = self.health.state != HEALTHY
             self.stats.queue_delays.append(req.t_admit - req.t_submit)
+            if quota is not None:
+                quota -= 1
             if self.pcache is not None and sched.preemptive:
                 self._maybe_preempt(req)
             ps = PrefillState(req=req)
@@ -406,6 +438,8 @@ class ServingEngine:
                 left -= n
             prefill_tokens += n
             self._run_prefill_chunk(slot, ps, n)
+        if shed and sched.ready:
+            self.health.shed()
         return prefill_tokens
 
     def _run_prefill_chunk(self, slot: int, ps: PrefillState, n: int) -> None:
@@ -443,6 +477,14 @@ class ServingEngine:
         if nxt == req.eos_id or req.max_new_tokens <= 1:
             self._finish_request(req)      # slot stays free for the next
             return
+        if self.pcache is not None and self.scheduler.preemptive:
+            # Preemption timing race: the shortfall was demoted at
+            # *admission*, but a chunked prefill only allocates its pages
+            # here, steps later — other slots' decode-tail growth can have
+            # stolen the freed pages in between.  Re-check at commit time
+            # (a no-op in the same-step whole-prompt case: nothing could
+            # allocate between the admission check and this one).
+            self._maybe_preempt(req)
         self._write_slot_cache(slot, ps.cache, len(req.prompt))
         self.lens[slot] = len(req.prompt)
         self._next_tok[slot, 0] = nxt
@@ -459,31 +501,175 @@ class ServingEngine:
             queue_delay=req.t_admit - req.t_submit,
             ttft=req.t_first - req.t_submit,
             e2e=req.t_done - req.t_submit,
-            preemptions=req.preemptions, slo_ttft_s=req.slo_ttft_s))
+            preemptions=req.preemptions, slo_ttft_s=req.slo_ttft_s,
+            admitted_degraded=req.admitted_degraded))
+
+    def _preempt_shortfall(self, incoming: Request) -> int:
+        """Local pages the incoming prompt still lacks: prompt pages (plus
+        the next decode token's) beyond the elastic free count, plus the
+        live migrator's allocation headroom — demoting exactly the raw
+        shortfall leaves zero headroom, so the migrator's very next
+        demote-for-headroom pass would fire again (demote ping-pong).
+        Headroom only applies when the migrator actually runs (budget
+        > 0): with a zero budget there is no ping-pong to prevent, and
+        folding it in would break the zero-budget no-op parity."""
+        need = -(-(len(incoming.prompt) + 1) // self.page_size)
+        if self.runtime is not None and self.runtime.migrator.pages_per_step > 0:
+            need += self.runtime.migrator.headroom
+        return need - self.pcache.local_free
 
     def _maybe_preempt(self, incoming: Request) -> None:
         """Tier-demotion preemption: when the incoming request's prompt
-        pages exceed the local pool's free pages, ask the scheduler for a
-        victim and demote (up to) the shortfall of its local KV pages to
-        the remote pool.  The victim keeps decoding through the
-        direct-access paged kernel — exact tokens, no recompute — while
-        the freed local pages receive the (hot) incoming prompt."""
-        need = -(-(len(incoming.prompt) + 1) // self.page_size)
-        shortfall = need - len(self.pcache.free[LOCAL])
+        pages exceed the local pool's free pages, ask the scheduler for
+        victims and demote the shortfall of their local KV pages to the
+        remote pool.  Victims keep decoding through the direct-access
+        paged kernel — exact tokens, no recompute — while the freed local
+        pages receive the (hot) incoming prompt.
+
+        Loops over `pick_victim` candidates until the shortfall is covered
+        or candidates are exhausted: a single victim whose local pages run
+        short would otherwise leave the remainder to synchronous
+        coldest-spills in `alloc`, silently bypassing the scheduler's
+        victim policy."""
+        shortfall = self._preempt_shortfall(incoming)
         if shortfall <= 0:
             return
-        candidates = [(slot, r) for slot, r in enumerate(self.active)
-                      if r is not None]
-        victim = self.scheduler.pick_victim(candidates, incoming)
-        if victim is None:
+        tried: set[int] = set()
+        while shortfall > 0:
+            candidates = [(slot, r) for slot, r in enumerate(self.active)
+                          if r is not None and slot not in tried]
+            victim = self.scheduler.pick_victim(candidates, incoming)
+            if victim is None:
+                return
+            tried.add(victim)
+            moved = self.pcache.demote_slot_pages(victim, max_pages=shortfall)
+            if not moved:
+                continue               # victim held no demotable local pages
+            shortfall -= moved
+            self.active[victim].preemptions += 1
+            self.stats.preemptions += 1
+            self.stats.preempt_demoted_pages += moved
+            self._preempt_moved_step += moved
+
+    # -- elastic degradation (never-OOM) ------------------------------------
+    def schedule_hbm_shrink(self, step: int, fraction: float) -> None:
+        """Chaos hook (`--hbm-shrink STEP:FRAC`): at decode step `step`,
+        shrink the modeled HBM page budget to `fraction` of the local
+        pool.  The engine degrades — demotes the deficit, re-plans to a
+        higher offload ratio, sheds admissions while spilling — instead
+        of crashing; the chaos tests pin zero failed requests and exact
+        tokens against the unpressured run."""
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"shrink fraction must be in [0, 1], got {fraction}")
+        self._pending_shrink = (int(step), float(fraction))
+
+    def shrink_local_budget(self, fraction: float) -> int:
+        """Apply an elastic local-budget shrink now: cap the cache's local
+        limit at ``fraction`` of the pool, mark the engine spilling, and
+        ask the runtime (when attached) for a higher-offload re-plan.
+        Returns the resulting page deficit (drained by `_elastic_step`)."""
+        if self.pcache is None:
+            return 0
+        deficit = self.pcache.set_local_limit(
+            int(self.pcache.n_local * fraction))
+        self.health.pressure("shrink", pages=deficit)
+        self._elastic_replan()
+        return deficit
+
+    def _elastic_replan(self) -> None:
+        """Ask the re-planner for a higher offload ratio matching the
+        shrunken local budget (PR 3's incremental repartition realizes
+        it); no-op without the adaptive runtime."""
+        if self.runtime is None or self.pcache is None:
             return
-        moved = self.pcache.demote_slot_pages(victim, max_pages=shortfall)
-        if not moved:
+        frac = self.pcache.local_limit / max(1, self.pcache.n_local)
+        new_params = self.runtime.elastic_replan(frac, self.params)
+        if new_params is not None and new_params is not self.params:
+            self.health.pressure("replan")
+            self._install_params(new_params)
+
+    def _install_params(self, new_params: dict[str, Any]) -> None:
+        """Swap in a repartitioned params tree (re-plan paths): re-shard
+        under a mesh, invalidate the per-step fetch cache, refresh the
+        traffic accounting."""
+        if self.mesh is not None:
+            from repro.launch.sharding import shard_tiered_params
+
+            new_params = shard_tiered_params(
+                new_params, self.mesh, self.mesh_axis)
+        self.params = new_params
+        self._step_params = None           # repartitioned: refetch next use
+        self._weight_bytes = weight_tier_bytes(self.params)
+        self._weight_link_bytes = weight_link_bytes(self.params, self.n_links)
+
+    def _elastic_recover(self, need_pages: int = 1) -> None:
+        """Convert a ``CacheFull`` into degradation: grow the elastic
+        remote (host) pool so the blocked allocation can land — capacity
+        pressure becomes host-bandwidth pressure, the trade the
+        direct-access path exists to make — then drain any local deficit
+        and re-plan toward a higher offload ratio."""
+        self.health.pressure("cache_full")
+        # Grow by at least one full sequence's pages so a long-context
+        # burst recovers in one growth, not one page at a time.
+        grow = max(need_pages, self.pcache.max_pages)
+        self.pcache.grow_remote(grow)
+        self.health.pressure("grow", pages=grow)
+        deficit = self.pcache.local_deficit
+        if deficit > 0:
+            moved = self.pcache.demote_coldest(deficit)
+            if moved:
+                self.health.pressure("demote", pages=moved)
+                self._preempt_moved_step += moved
+        self._elastic_replan()
+
+    def _ensure_capacity_elastic(self, slot: int, length: int) -> None:
+        """`ensure_capacity` with the never-OOM guarantee: a CacheFull is
+        caught, converted into remote growth + demotion, and the
+        allocation retried.  A second failure is a real bug (max_pages
+        overflow) and surfaces."""
+        try:
+            self.pcache.ensure_capacity(slot, length)
+        except CacheFull:
+            need = (-(-length // self.page_size)
+                    - int(self.pcache.n_pages[slot]))
+            self._elastic_recover(max(1, need))
+            self.pcache.ensure_capacity(slot, length)
+
+    def _elastic_step(self) -> None:
+        """Per-step elastic drain: demote the deficit a shrunken local
+        budget left behind (globally coldest pages first), growing the
+        remote pool when it cannot absorb them.  Movement draws down the
+        shared per-step migration budget via `_preempt_moved_step`."""
+        if self.pcache is None:
             return
-        self.active[victim].preemptions += 1
-        self.stats.preemptions += 1
-        self.stats.preempt_demoted_pages += moved
-        self._preempt_moved_step += moved
+        deficit = self.pcache.local_deficit
+        if deficit <= 0:
+            return
+        short = deficit - len(self.pcache.free[REMOTE])
+        if short > 0:
+            self.pcache.grow_remote(short)
+            self.health.pressure("grow", pages=short)
+        moved = self.pcache.demote_coldest(deficit)
+        if moved:
+            self.health.pressure("demote", pages=moved)
+            self._preempt_moved_step += moved
+
+    def _finish_step_health(self) -> None:
+        """End-of-step health update: walk the recovery ladder against the
+        cache's current deficit and sync the counters into EngineStats."""
+        deficit = self.pcache.local_deficit if self.pcache is not None else 0
+        self.health.observe(deficit)
+        self._note_health()
+
+    def _note_health(self) -> None:
+        """Fold the health monitor's state/counters into EngineStats."""
+        c = self.health.counters
+        self.stats.health = self.health.state
+        self.stats.cache_full_caught = c.cache_full_caught
+        self.stats.elastic_demoted_pages = c.elastic_demoted_pages
+        self.stats.remote_grown_pages = c.remote_grown_pages
+        self.stats.shed_steps = c.shed_steps
+        self.stats.elastic_replans = c.elastic_replans
 
     # -- modeled clock ------------------------------------------------------
     def _clock_tick_prefill(self, n_tokens: int) -> None:
@@ -539,6 +725,10 @@ class ServingEngine:
             for k in self.cache:
                 self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
             return
+        # write_prompt's internal ensure_capacity is the allocation edge:
+        # pre-allocate through the elastic guard so a full pool degrades
+        # (grow remote, demote, retry) instead of raising CacheFull.
+        self._ensure_capacity_elastic(slot, prompt_len)
         if self.cfg.family == "hybrid":
             for k in self.cache:               # conv/state recurrent state
                 self.cache[k] = self.cache[k].at[:, slot].set(cache1[k][:, 0])
@@ -574,6 +764,12 @@ class ServingEngine:
         self._preempt_moved_step = 0
         if self.runtime is not None:
             self.window = self.runtime.window
+        if (self._pending_shrink is not None
+                and self.stats.decode_steps >= self._pending_shrink[0]):
+            _, frac = self._pending_shrink
+            self._pending_shrink = None
+            self.shrink_local_budget(frac)
+        self._elastic_step()               # drain any local-budget deficit
         prefill_tokens = self._admit()
         if not any(r is not None for r in self.active):
             if prefill_tokens:
@@ -586,6 +782,7 @@ class ServingEngine:
                 nxt = self.scheduler.next_arrival()
                 if nxt is not None:
                     self.clock.advance(max(0.0, nxt - self.clock.now()))
+            self._finish_step_health()
             return
         active = np.array([r is not None for r in self.active])
         if self.pcache is not None:
@@ -610,7 +807,7 @@ class ServingEngine:
                 mesh=self.mesh, mesh_axis=self.mesh_axis)
         else:
             for slot in np.nonzero(active)[0]:
-                self.pcache.ensure_capacity(int(slot), int(self.lens[slot]) + 1)
+                self._ensure_capacity_elastic(int(slot), int(self.lens[slot]) + 1)
             self._note_occupancy()
             wr_tier, wr_idx, wr_off = self.pcache.write_targets(self.lens, active)
             table, tier = self.pcache.device_tables()
@@ -639,6 +836,7 @@ class ServingEngine:
         self.stats.decode_steps += 1
         self._clock_tick_decode(active)
         self._runtime_step(t_step, prefill_tokens, active)
+        self._finish_step_health()
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
         for slot, req in enumerate(self.active):
             if req is None:
@@ -693,20 +891,15 @@ class ServingEngine:
             local_bytes=local_b,
             remote_bytes=sum(link_b),
             window=self.window,
-            remote_bytes_per_link=tuple(link_b) if self.n_links > 1 else None)
+            remote_bytes_per_link=tuple(link_b) if self.n_links > 1 else None,
+            health=self.health.state,
+            local_deficit=(self.pcache.local_deficit
+                           if self.pcache is not None else 0))
         new_params = self.runtime.on_step(
             sample, cache=self.pcache, params=self.params,
             migration_used=self._preempt_moved_step)
         if new_params is not None and new_params is not self.params:
-            if self.mesh is not None:
-                from repro.launch.sharding import shard_tiered_params
-
-                new_params = shard_tiered_params(
-                    new_params, self.mesh, self.mesh_axis)
-            self.params = new_params
-            self._step_params = None       # repartitioned: refetch next use
-            self._weight_bytes = weight_tier_bytes(self.params)
-            self._weight_link_bytes = weight_link_bytes(self.params, self.n_links)
+            self._install_params(new_params)
         rs = self.runtime.stats
         self.stats.replans = rs.replans
         self.stats.promoted_pages = rs.promoted_pages

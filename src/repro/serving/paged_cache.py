@@ -117,6 +117,12 @@ class PagedTieredCache:
             LOCAL: list(range(local_pages)),
             REMOTE: list(range(remote_pages)),
         }
+        # Elastic HBM budget: the allocator never places more than
+        # `local_limit` pages in the local pool.  Defaults to the full pool
+        # (a strict no-op); `set_local_limit` shrinks it mid-run (chaos /
+        # degraded mode) without resizing the jnp allocation — pages above
+        # the limit are a *deficit* the engine drains via demotion.
+        self.local_limit = local_pages
         # table[slot, p] = pool index of the slot's p-th page; tier picks pool
         self.table = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
         self.tier = np.zeros((max_slots, max_pages_per_slot), dtype=np.int32)
@@ -178,6 +184,30 @@ class PagedTieredCache:
         return self.n_remote - len(self.free[REMOTE])
 
     @property
+    def local_free(self) -> int:
+        """Allocatable local pages under the elastic limit: the free-list
+        depth, clipped by what the (possibly shrunken) budget still covers.
+        Equal to ``len(free[LOCAL])`` at the default (full) limit."""
+        return max(0, min(len(self.free[LOCAL]),
+                          self.local_limit - self.local_in_use))
+
+    @property
+    def local_deficit(self) -> int:
+        """Local pages in use beyond the elastic limit — resident pages a
+        shrunken HBM budget no longer covers, to be drained by demotion."""
+        return max(0, self.local_in_use - self.local_limit)
+
+    def set_local_limit(self, n: int) -> int:
+        """Elastically shrink (or restore) the modeled HBM page budget.
+
+        The pool allocation is untouched — only the allocator's ceiling
+        moves, so restoring the limit is free.  Returns the resulting
+        deficit (pages in use above the new limit) for the caller to
+        drain via :meth:`demote_coldest`."""
+        self.local_limit = max(0, min(int(n), self.n_local))
+        return self.local_deficit
+
+    @property
     def sink_local(self) -> int:
         return self.n_local
 
@@ -207,10 +237,15 @@ class PagedTieredCache:
         p = int(self.n_pages[slot])
         if p >= self.max_pages:
             raise CacheFull(f"slot {slot} already at max_pages={self.max_pages}")
-        if self.free[LOCAL]:
+        if self.local_free > 0:
             idx = self.free[LOCAL].pop()
             tier = LOCAL
-        elif self.n_local > 0:
+        elif (self.n_local > 0 and not self.free[LOCAL]
+              and self.local_in_use <= self.local_limit):
+            # Local pool physically full but within the elastic budget:
+            # hottest-first spills the coldest local page to make room.
+            # Under a shrunken limit the free list is non-empty, so this
+            # branch is skipped and new pages go remote instead.
             idx = self._spill_coldest_local()
             tier = LOCAL
         elif self.free[REMOTE]:
@@ -264,11 +299,16 @@ class PagedTieredCache:
         sfx = {LOCAL: "local", REMOTE: "remote"}
         src_idx = np.asarray(ids, np.int32)
         dst_idx = np.asarray(dsts, np.int32)
+        updated = dict(self.pools)
         for name in self.kv_names:
-            src_pool = self.pools[f"{name}_{sfx[tier_from]}"]
-            dst_pool = self.pools[f"{name}_{sfx[tier_to]}"]
-            self.pools[f"{name}_{sfx[tier_to]}"] = \
+            src_pool = updated[f"{name}_{sfx[tier_from]}"]
+            dst_pool = updated[f"{name}_{sfx[tier_to]}"]
+            updated[f"{name}_{sfx[tier_to]}"] = \
                 dst_pool.at[:, dst_idx].set(src_pool[:, src_idx])
+        # Through commit_pools, not direct assignment: under a mesh the
+        # scatter output loses the remote pool's 1/P sharded layout, and a
+        # plain `self.pools[...] = ...` would silently keep it dropped.
+        self.commit_pools(updated)
         for src, dst, (slot, p) in zip(ids, dsts, owners, strict=True):
             del self._owner[(tier_from, int(src))]
             self._owner[(tier_to, dst)] = (slot, p)
@@ -325,6 +365,44 @@ class PagedTieredCache:
             return 0
         victims = self.heat.ranked(LOCAL, owned, hottest_first=False)[:budget]
         return self.move_pages(LOCAL, REMOTE, victims)
+
+    # -- elastic degradation ----------------------------------------------
+    def demote_coldest(self, n: int) -> int:
+        """Demote up to `n` of the globally coldest owned local pages to
+        the remote pool — the elastic drain for a shrunken local budget
+        (no victim slot: pressure comes from the budget, not a request).
+        Capped by the remote free list; returns pages moved (counted as
+        demotions, like the migrator's)."""
+        owned = self.owned_pages(LOCAL)
+        budget = min(max(0, int(n)), len(owned), len(self.free[REMOTE]))
+        if budget <= 0:
+            return 0
+        victims = self.heat.ranked(LOCAL, owned, hottest_first=False)[:budget]
+        return self.move_pages(LOCAL, REMOTE, victims)
+
+    def grow_remote(self, extra: int) -> int:
+        """Grow the remote (host) pool by `extra` pages — host RAM is the
+        elastic tier, so this is how a ``CacheFull`` becomes degradation
+        instead of failure.  Existing pages keep their indices; the sink
+        page moves to the new last index (readers take it per step via
+        :meth:`sink_remote`); the new pages join the free list.  Returns
+        the new remote page count."""
+        if extra <= 0:
+            return self.n_remote
+        updated = dict(self.pools)
+        for name in self.kv_names:
+            key = f"{name}_remote"
+            pool = self.pools[key]
+            pad = jnp.zeros((pool.shape[0], extra, *pool.shape[2:]),
+                            pool.dtype)
+            # old pages, new pages, then the sink stays last
+            updated[key] = jnp.concatenate(
+                [pool[:, :self.n_remote], pad, pool[:, self.n_remote:]],
+                axis=1)
+        self.free[REMOTE].extend(range(self.n_remote, self.n_remote + extra))
+        self.n_remote += extra
+        self.commit_pools(updated)
+        return self.n_remote
 
     # -- per-step temperature bookkeeping ---------------------------------
     def touch_step(self, lens: np.ndarray, active: np.ndarray) -> None:

@@ -1,0 +1,180 @@
+"""Elastic degradation: mid-trace HBM shrink must never fail a request.
+
+The never-OOM acceptance from ISSUE 6: a chaos event that shrinks the
+local page budget mid-run is absorbed by the health ladder (demote the
+deficit, grow the host tier, re-plan toward a higher offload ratio,
+back off admissions) — zero failed requests, and because placement is
+value-invariant, *bitwise identical tokens* to an unpressured run.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import model as M
+from repro.runtime.controller import RuntimeController
+from repro.runtime.health import (
+    HEALTHY, RECOVERING, SPILLING, HealthMonitor)
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _prompts(cfg, n=6, length=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, cfg.vocab, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _serve(eng, prompts, new_tokens=8):
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=new_tokens))
+    reqs = list(eng.queue)
+    eng.run()
+    return [r.out_tokens for r in reqs]
+
+
+def _engine(cfg, params, **kw):
+    return ServingEngine(cfg, params, max_batch=4, max_len=48,
+                         global_offload_ratio=0.1, page_size=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Health state machine (pure, no engine)
+# ---------------------------------------------------------------------------
+def test_health_ladder_transitions_and_recovery():
+    mon = HealthMonitor(recover_steps=2)
+    assert mon.state == HEALTHY
+    mon.pressure("shrink", pages=3)
+    assert mon.state == SPILLING
+    mon.observe(deficit=3)              # still under water
+    assert mon.state == SPILLING
+    mon.observe(deficit=0)              # deficit drained: clean step 1 of 2
+    assert mon.state == RECOVERING
+    mon.observe(deficit=0)              # clean step 2: promoted
+    assert mon.state == HEALTHY
+    assert [(a, b) for _, a, b in mon.transitions] == [
+        (HEALTHY, SPILLING), (SPILLING, RECOVERING), (RECOVERING, HEALTHY)]
+
+
+def test_health_fresh_pressure_resets_recovery():
+    mon = HealthMonitor(recover_steps=2)
+    mon.pressure("cache_full")
+    mon.observe(deficit=0)              # the event's own step: still spilling
+    assert mon.state == SPILLING
+    mon.observe(deficit=0)
+    assert mon.state == RECOVERING
+    mon.pressure("demote", pages=1)     # relapse while recovering
+    assert mon.state == SPILLING
+    assert mon.counters.cache_full_caught == 1
+    assert mon.counters.elastic_demoted_pages == 1
+
+
+def test_health_stays_healthy_without_pressure():
+    mon = HealthMonitor()
+    for _ in range(10):
+        mon.observe(deficit=0)
+    assert mon.state == HEALTHY
+    assert mon.counters.events == 0 and mon.transitions == []
+
+
+# ---------------------------------------------------------------------------
+# Engine chaos runs
+# ---------------------------------------------------------------------------
+def test_chaos_shrink_zero_failures_exact_tokens():
+    """Acceptance: an 80% mid-trace HBM shrink loses no requests and
+    changes no tokens vs the unpressured run."""
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    prompts = _prompts(cfg)
+
+    calm = _engine(cfg, params)
+    want = _serve(calm, prompts)
+
+    chaos = _engine(cfg, params)
+    chaos.schedule_hbm_shrink(2, 0.2)   # at decode step 2, keep 20% of HBM
+    got = _serve(chaos, prompts)
+
+    assert got == want, "chaos run diverged from unpressured tokens"
+    assert chaos.stats.served == len(prompts)
+    assert chaos.stats.failed_requests == 0
+    assert chaos.health.counters.shrink_events == 1
+    # pressure actually bit: pages were demoted and/or the host tier grew
+    assert (chaos.health.counters.elastic_demoted_pages > 0
+            or chaos.health.counters.remote_grown_pages > 0)
+    # and the engine climbed back down the ladder by end of run
+    assert chaos.health.state == HEALTHY
+    assert chaos.stats.health == HEALTHY
+
+
+def test_no_pressure_run_is_untouched():
+    """Zero-budget no-op discipline: without a chaos event the elastic
+    machinery must be invisible — healthy forever, all counters zero."""
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    eng = _engine(cfg, params)
+    _serve(eng, _prompts(cfg))
+    assert eng.health.state == HEALTHY
+    assert eng.health.counters.events == 0
+    assert eng.health.transitions == []
+    assert eng.stats.failed_requests == 0
+    assert eng.pcache.local_limit == eng.pcache.n_local
+
+
+def test_chaos_shrink_adaptive_replans_to_higher_ratio():
+    """With the adaptive runtime attached, elastic pressure triggers an
+    online re-plan that raises the offload ratio — and tokens still
+    match the unpressured static run exactly."""
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    prompts = _prompts(cfg)
+
+    want = _serve(_engine(cfg, params), prompts)
+
+    probe = _engine(cfg, params)
+    rt = RuntimeController(cfg, probe.plan, probe.hw, window_budget=0,
+                           migration_budget=0,
+                           drift_threshold=float("inf"))
+    eng = _engine(cfg, params, runtime=rt)
+    eng.schedule_hbm_shrink(2, 0.2)
+    got = _serve(eng, prompts)
+
+    assert got == want
+    assert eng.stats.failed_requests == 0
+    assert eng.stats.elastic_replans >= 1
+    assert eng.runtime.plan.global_ratio > 0.1 + 1e-6
+
+
+def test_degraded_admission_backoff_and_accounting():
+    """While spilling the scheduler's admission quota is 0 (recovering: a
+    trickle of 1), and requests admitted under degradation are tagged in
+    the per-request records."""
+    from repro.frontend.scheduler import get_scheduler
+
+    sched = get_scheduler("fcfs")
+    assert sched.admission_quota(SPILLING) == 0
+    assert sched.admission_quota(RECOVERING) == 1
+    assert sched.admission_quota(HEALTHY) is None
+
+    from repro.frontend.metrics import slo_report
+
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    eng = _engine(cfg, params, scheduler="fcfs")
+    for rid, p in enumerate(_prompts(cfg, n=2, length=8)):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+    # Force pressure before anything is admitted: the quota drops to 0,
+    # but the idle override still trickles one request through (a fully
+    # idle engine must not deadlock on backoff) — tagged as degraded.
+    eng.health.pressure("cache_full")
+    eng.step()
+    assert sum(r is not None for r in eng.active) + len(eng.prefilling) == 1
+    eng.run()
+    assert eng.stats.served == 2
+    assert eng.stats.failed_requests == 0
+    # both admissions landed inside the degraded window (the second via
+    # the recovering-state trickle) and carry the tag through to reports
+    assert all(r.admitted_degraded for r in eng.stats.requests)
+    rep = slo_report(eng.stats.requests)
+    assert sum(c["degraded_admissions"] for c in rep.values()) == 2

@@ -132,6 +132,38 @@ def test_engine_mesh_sharded_kv_pools():
     assert tuple(eng.pcache.pools["k_local"].sharding.spec) == ()
 
 
+def test_move_pages_preserves_remote_pool_sharding():
+    """Satellite: `move_pages` routes pool updates through `commit_pools`,
+    so a demotion/promotion never silently de-shards the remote tier (a
+    plain `.at[].set` would gather the pool onto one device); emergency
+    `grow_remote` keeps the committed spec too."""
+    import jax.numpy as jnp
+
+    from repro.serving.paged_cache import LOCAL, REMOTE, PagedTieredCache
+
+    cache = PagedTieredCache(
+        2, 2, 4, page_size=4, local_pages=4, remote_pages=4, max_slots=2,
+        max_pages_per_slot=4, mesh=_mesh(4), mesh_axis="model")
+    assert cache.remote_sharded
+    want = (None, None, "model", None, None)
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(2, 8, 2, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 8, 2, 4)), jnp.float32)
+    cache.write_prompt(0, k, v)                     # 2 local pages
+
+    cache.move_pages(LOCAL, REMOTE, cache.slot_pages(0, LOCAL)[:1])
+    assert tuple(cache.pools["k_remote"].sharding.spec) == want
+    assert tuple(cache.pools["k_local"].sharding.spec) == ()
+    cache.move_pages(REMOTE, LOCAL, cache.slot_pages(0, REMOTE)[:1])
+    assert tuple(cache.pools["k_remote"].sharding.spec) == want
+
+    assert cache.grow_remote(4) == 8                # elastic host growth
+    assert tuple(cache.pools["k_remote"].sharding.spec) == want
+    gk, gv = cache.gather(0, 8)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(v))
+
+
 # -- per-device host-link traffic vs the multicast oracle -------------------
 def test_per_device_traffic_matches_multicast_oracle():
     """Satellite: per-device host-link bytes drop ~1/P on the broadcast

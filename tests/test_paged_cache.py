@@ -88,6 +88,93 @@ def test_pool_must_cover_one_sequence():
         _mk(1, 1, page=4, slots=1, max_pages=4)
 
 
+# -- CacheFull crash paths (pinned: these are what the engine's elastic
+# -- degradation must catch and convert, never let escape a serving run) ----
+def test_alloc_raises_when_both_tiers_exhausted():
+    cache = _mk(2, 2, page=4, slots=3, max_pages=4)
+    rng = np.random.default_rng(5)
+    cache.write_prompt(0, *_rand_kv(rng, 16))           # 4 pages: 2L + 2R
+    assert cache.local_in_use + cache.remote_in_use == 4
+    with pytest.raises(CacheFull, match="both tiers exhausted"):
+        cache.alloc(1)
+
+
+def test_alloc_raises_at_max_pages_overflow():
+    cache = _mk(8, 0, page=4, slots=1, max_pages=2)
+    rng = np.random.default_rng(6)
+    cache.write_prompt(0, *_rand_kv(rng, 8))            # at the 2-page cap
+    with pytest.raises(CacheFull, match="max_pages"):
+        cache.alloc(0)
+
+
+def test_move_pages_raises_when_destination_full():
+    cache = _mk(2, 2, page=4, slots=3, max_pages=4)
+    rng = np.random.default_rng(7)
+    cache.write_prompt(0, *_rand_kv(rng, 16))           # both pools full
+    local = cache.slot_pages(0, LOCAL)
+    with pytest.raises(CacheFull, match="free pages"):
+        cache.move_pages(LOCAL, REMOTE, local[:1])
+
+
+# -- elastic degraded mode --------------------------------------------------
+def test_local_limit_shrink_reports_deficit_and_redirects_allocs():
+    """Shrinking the elastic limit below occupancy yields a deficit, new
+    pages go remote (no local alloc, no spill), and draining via
+    demote_coldest clears the deficit; restoring the limit is free."""
+    cache = _mk(4, 4, page=4, slots=2, max_pages=4)
+    rng = np.random.default_rng(8)
+    cache.write_prompt(0, *_rand_kv(rng, 8))            # 2 local pages
+    assert cache.local_in_use == 2
+    assert cache.set_local_limit(1) == 1                # deficit of 1
+    assert cache.local_deficit == 1 and cache.local_free == 0
+    ref = cache.alloc(0)                                # over-budget: remote
+    assert ref.tier == REMOTE and cache.local_in_use == 2
+    assert cache.demote_coldest(cache.local_deficit) == 1
+    assert cache.local_deficit == 0 and cache.local_in_use == 1
+    # coldest (oldest) page demoted: the head page moved, the tail stayed
+    assert cache.tier[0, 0] == REMOTE and cache.tier[0, 1] == LOCAL
+    cache.set_local_limit(cache.n_local)                # restore
+    assert cache.local_free == len(cache.free[LOCAL])
+    k, v = cache.gather(0, 12)
+    assert k.shape[1] == 12 and v.shape[1] == 12
+
+
+def test_local_limit_default_is_noop():
+    """At the default (full) limit the elastic accessors are aliases of
+    the raw free list — the zero-pressure bitwise-identity contract."""
+    cache = _mk(3, 3, page=4, slots=2, max_pages=4)
+    rng = np.random.default_rng(9)
+    cache.write_prompt(0, *_rand_kv(rng, 8))
+    assert cache.local_limit == cache.n_local
+    assert cache.local_free == len(cache.free[LOCAL])
+    assert cache.local_deficit == 0
+
+
+def test_grow_remote_preserves_contents_and_extends_free_list():
+    """Emergency host-pool growth: existing pages keep indices and data
+    bit-exactly, new pages join the free list, the sink moves last."""
+    cache = _mk(2, 2, page=4, slots=2, max_pages=4)
+    rng = np.random.default_rng(10)
+    k, v = _rand_kv(rng, 16)
+    cache.write_prompt(0, k, v)                         # fills both tiers
+    with pytest.raises(CacheFull):
+        cache.alloc(1)
+    assert cache.grow_remote(3) == 5
+    assert cache.sink_remote == 5
+    assert cache.pools["k_remote"].shape[1] == 6        # 5 pages + sink
+    assert sorted(cache.free[REMOTE]) == [2, 3, 4]
+    gk, gv = cache.gather(0, 16)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(v))
+    # Allocation works again: hottest-first placement spills the coldest
+    # local page into the grown remote space and hands out a local page.
+    spills_before = cache.spills
+    ref = cache.alloc(1)
+    assert ref.tier == LOCAL
+    assert cache.spills == spills_before + 1
+    assert cache.local_in_use + cache.remote_in_use == 5
+
+
 def test_write_targets_redirects_idle_slots_to_sink():
     cache = _mk(4, 2, page=4, slots=3, max_pages=2)
     rng = np.random.default_rng(4)
