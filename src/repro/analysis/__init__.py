@@ -1,0 +1,24 @@
+"""repro.analysis — static verifier for the DAK direct-access invariants.
+
+Four passes, each with stable ``DAKxxx`` rule IDs (see ``findings.RULES``
+and ``docs/analysis.md``):
+
+- :mod:`repro.analysis.materialization` — DAK001-003, no-HBM-materialization
+  taint lint over traced serving entry points;
+- :mod:`repro.analysis.kernel_lints` — DAK101-103, Pallas launch geometry
+  (VMEM footprint, TMA alignment, grid coverage);
+- :mod:`repro.analysis.plan_checks` — DAK201-205, planner postconditions
+  (budget conservation, registry completeness, window optimality,
+  repartition idempotence, mesh structure);
+- :mod:`repro.analysis.page_table` — DAK301-305, paged KV cache invariants
+  (also exposed live via ``ServingEngine(check_invariants=True)``).
+
+``python -m repro.analysis --all`` runs everything over the serving matrix
+and exits non-zero on any finding.
+"""
+from repro.analysis.findings import (RULES, Finding, format_text, render_report,
+                                     write_report)
+from repro.analysis.page_table import InvariantViolation, check_page_table
+
+__all__ = ["RULES", "Finding", "InvariantViolation", "check_page_table",
+           "format_text", "render_report", "write_report"]

@@ -1,0 +1,305 @@
+"""Materialization lint (DAK001-003): the direct-access guarantee, checked
+mechanically on the jaxpr.
+
+DAK's core design rule is that remote-tier data is *never* staged through
+HBM: weights stream tile-by-tile into VMEM scratch (windowed fetch inside
+the Pallas kernels), and under a mesh each shard crosses a host link once
+into the sanctioned ``mesh_fetch_params`` all-gather.  The token-parity
+tests cannot see a regression that quietly concatenates a remote tier into
+an HBM buffer before computing — the numbers stay identical; only the
+architecture reverts to prefetching.
+
+So this lint traces each family's decode / prefill / chunked-prefill entry
+point to a jaxpr with the *remote leaves marked* (``surface.RemoteLeaf``)
+and walks it with a taint semantics:
+
+- taint **enters** at every marked input (a remote weight tier, a remote KV
+  pool) and propagates through copies, reshapes, slices, gathers,
+  elementwise ops, and control-flow sub-jaxprs (scan/while/cond/pjit);
+- taint is **consumed** by the sanctioned direct-access sinks — contractions
+  (``dot_general``/``conv``/reductions: compute reads the tier in place),
+  ``pallas_call`` (the windowed-fetch kernels), and ``all_gather`` (the
+  fetch-once mesh broadcast);
+- taint **fires** at HBM-materialization points: ``concatenate`` with a
+  tainted operand, or ``dynamic_update_slice``/``scatter`` whose *update*
+  (not target) is tainted — i.e. remote-derived data being written into an
+  HBM-resident buffer.  Writing activations *into* the remote pool keeps
+  the pool's own taint and is sanctioned.
+
+Rules: DAK001 (decode traces), DAK002 (prefill / chunked prefill),
+DAK003 (remote KV pools — same walk, seeded at the pool leaves).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import surface
+from repro.analysis.findings import Finding
+
+# Sanctioned consumers: primitives that read tainted data without copying
+# it into an HBM-resident buffer of comparable extent.
+_KILL = frozenset({
+    "dot_general", "conv_general_dilated", "pallas_call",
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or", "reduce_xor",
+    "argmax", "argmin", "reduce_precision",
+    "cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp",
+    "sort", "top_k",
+    # fetch-once mesh broadcast (kernels.ops.broadcast_remote) and other
+    # cross-device collectives: data crosses a link, not into an HBM copy
+    # of the resident tree.
+    "all_gather", "all_to_all", "psum", "pmax", "pmin", "ppermute",
+})
+
+# (primitive, index of the "update" operand): firing only on a tainted
+# update keeps writes of fresh activations INTO the remote pool sanctioned
+# (the target's taint just flows through).
+_UPDATE_OPERAND = {
+    "dynamic_update_slice": 1,
+    "scatter": 2, "scatter-add": 2, "scatter-mul": 2,
+    "scatter-min": 2, "scatter-max": 2,
+}
+
+_MAX_FIXPOINT = 8
+
+
+def _source_line(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return "<unknown>"
+
+
+def _sub_jaxpr(eqn) -> Any:
+    """The (closed or open) sub-jaxpr of a call-like eqn whose invars map
+    1:1 onto the outer eqn's invars, or None."""
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is None:
+            continue
+        inner = getattr(sub, "jaxpr", sub)
+        if len(inner.invars) == len(eqn.invars):
+            return inner
+    return None
+
+
+def _walk(jaxpr, in_taint: list[bool], *, rule: str, where: str,
+          findings: list[Finding] | None) -> list[bool]:
+    """Propagate boolean taint through one jaxpr; returns outvar taint.
+    ``findings=None`` runs silently (fixpoint warm-up passes)."""
+    env: dict[Any, bool] = {}
+    for v, t in zip(jaxpr.invars, in_taint, strict=True):
+        env[v] = bool(t)
+    for v in jaxpr.constvars:
+        env[v] = False
+
+    def read(atom: Any) -> bool:
+        try:
+            return env.get(atom, False)
+        except TypeError:  # jax.core.Literal is unhashable
+            return False
+
+    def emit(eqn, detail: str) -> None:
+        if findings is not None:
+            findings.append(Finding(
+                rule, where,
+                f"{detail} at {_source_line(eqn)}",
+                context={"primitive": eqn.primitive.name}))
+
+    def run_sub(sub, sub_in: list[bool], report: bool) -> list[bool]:
+        return _walk(sub, sub_in, rule=rule, where=where,
+                     findings=findings if report else None)
+
+    def fixpoint(sub, consts_t: list[bool], carry_t: list[bool],
+                 extra_t: list[bool], n_carry: int) -> list[bool]:
+        """Iterate a loop body until the carry taint stabilizes (boolean
+        taint is monotone under OR, so this terminates)."""
+        carry = list(carry_t)
+        for _ in range(_MAX_FIXPOINT):
+            outs = run_sub(sub, consts_t + carry + extra_t, report=False)
+            new_carry = [c or o for c, o in zip(carry, outs[:n_carry])]
+            if new_carry == carry:
+                break
+            carry = new_carry
+        return run_sub(sub, consts_t + carry + extra_t, report=True)
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        ts = [read(x) for x in eqn.invars]
+        any_t = any(ts)
+
+        if name == "scan":
+            sub = eqn.params["jaxpr"].jaxpr
+            nc, ncar = eqn.params["num_consts"], eqn.params["num_carry"]
+            outs = fixpoint(sub, ts[:nc], ts[nc:nc + ncar], ts[nc + ncar:], ncar)
+            for v, t in zip(eqn.outvars, outs, strict=True):
+                env[v] = t
+            continue
+        if name == "while":
+            cn, bn = eqn.params["cond_nconsts"], eqn.params["body_nconsts"]
+            body = eqn.params["body_jaxpr"].jaxpr
+            carry_t = ts[cn + bn:]
+            outs = fixpoint(body, ts[cn:cn + bn], carry_t, [], len(carry_t))
+            for v, t in zip(eqn.outvars, outs, strict=True):
+                env[v] = t
+            continue
+        if name == "cond":
+            branch_outs = [
+                run_sub(br.jaxpr, ts[1:], report=True)
+                for br in eqn.params["branches"]
+            ]
+            for i, v in enumerate(eqn.outvars):
+                env[v] = any(outs[i] for outs in branch_outs)
+            continue
+        sub = None if name in _KILL else _sub_jaxpr(eqn)
+        if sub is not None:
+            outs = run_sub(sub, ts, report=True)
+            for v, t in zip(eqn.outvars, outs, strict=True):
+                env[v] = t
+            continue
+
+        if name in _KILL:
+            out_t = False
+        elif name == "concatenate":
+            if any_t:
+                emit(eqn, "remote-tier data concatenated into an HBM-resident "
+                          f"buffer {tuple(eqn.outvars[0].aval.shape)}")
+            out_t = False  # flagged once; don't cascade downstream
+        elif name in _UPDATE_OPERAND:
+            upd = _UPDATE_OPERAND[name]
+            if upd < len(ts) and ts[upd]:
+                emit(eqn, "remote-derived update written into an HBM-resident "
+                          f"buffer {tuple(eqn.outvars[0].aval.shape)}")
+            out_t = ts[0] if ts else False
+        else:
+            out_t = any_t
+        for v in eqn.outvars:
+            env[v] = out_t
+    return [read(v) for v in jaxpr.outvars]
+
+
+def remote_mask(args: tuple[Any, ...]) -> list[bool]:
+    """Per-flat-leaf remote flags, in jax flatten order."""
+    return [isinstance(leaf, surface.RemoteLeaf)
+            for leaf in jax.tree_util.tree_leaves(args)]
+
+
+def lint_traced(fn: Callable[..., Any], args: tuple[Any, ...], *,
+                rule: str, where: str) -> list[Finding]:
+    """Trace ``fn(*args)`` (args carry ShapeDtypeStruct / RemoteLeaf
+    leaves) and taint-walk the jaxpr."""
+    mask = remote_mask(args)
+    closed = jax.make_jaxpr(fn)(*args)
+    invars = closed.jaxpr.invars
+    if len(invars) != len(mask):
+        raise RuntimeError(
+            f"lint mask length {len(mask)} != jaxpr invars {len(invars)} "
+            f"at {where} — argument flattening out of sync")
+    findings: list[Finding] = []
+    _walk(closed.jaxpr, mask, rule=rule, where=where, findings=findings)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Family entry points
+# --------------------------------------------------------------------------
+_B = 2            # trace batch (any batch traces the same program structure)
+_T = 8            # trace prompt length
+_PS = 16          # trace page size
+_POOL = 4         # pages per tier pool (+1 sink added by the layout)
+_MP = 4           # max pages per slot
+
+
+def _tok(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _decode_args(cfg) -> tuple[dict[str, Any], tuple[Any, ...], dict[str, Any]]:
+    pools = surface.abstract_kv_pools(
+        cfg, local_pages=_POOL, remote_pages=_POOL, page_size=_PS)
+    args = (pools, _tok((_B, 1)), _tok((_B,)), _tok((_B,)),
+            _tok((_B, _MP)), _tok((_B, _MP)), _tok((_B,)), _tok((_B,)),
+            _tok((_B,)))
+    kw = {"sink_local": _POOL, "sink_remote": _POOL, "window": 2,
+          "use_kernel": True}
+    return pools, args, kw
+
+
+def lint_family(cfg, plan, *, align: int = 1,
+                passes: tuple[str, ...] = ("decode", "prefill", "chunk"),
+                where: str = "") -> list[Finding]:
+    """Run the materialization lint over one family's serving entry points
+    with the plan's realized tier split (abstract, full-size)."""
+    from repro.models import model as M
+    from repro.serving import tiered_decode as TD
+
+    params = surface.partition_abstract(cfg, plan, align=align)
+    findings: list[Finding] = []
+
+    if "decode" in passes:
+        site = f"{where}/decode"
+        if cfg.family == "ssm":
+            cache = jax.eval_shape(lambda: M.init_cache(cfg, _B, _T))
+            findings += lint_traced(
+                lambda p, c, t: TD.tiered_ssm_decode_step(
+                    cfg, p, c, t, window=2, use_kernel=True),
+                (params, cache, _tok((_B, 1))), rule="DAK001", where=site)
+        elif cfg.family == "hybrid":
+            cache = jax.eval_shape(
+                lambda: {k: v for k, v in M.init_cache(cfg, _B, _T).items()
+                         if k in ("conv", "state")})
+            pools, dargs, kw = _decode_args(cfg)
+            findings += lint_traced(
+                lambda p, c, pl, *rest: TD.tiered_hybrid_decode_step(
+                    cfg, p, c, pl, *rest, **kw),
+                (params, cache) + ((dargs[0],) + dargs[1:]),
+                rule="DAK001", where=site)
+        else:
+            pools, dargs, kw = _decode_args(cfg)
+            findings += lint_traced(
+                lambda p, pl, *rest: TD.paged_tiered_decode_step(
+                    cfg, p, pl, *rest, **kw),
+                (params,) + dargs, rule="DAK001", where=site)
+
+    if "prefill" in passes:
+        findings += lint_traced(
+            lambda p, t: M.prefill(cfg, p, {"tokens": t})[0],
+            (params, _tok((_B, _T))), rule="DAK002", where=f"{where}/prefill")
+
+    if "chunk" in passes:
+        cache = jax.eval_shape(lambda: M.init_cache(cfg, _B, 2 * _T))
+        findings += lint_traced(
+            lambda p, c, t: M.prefill_chunk(cfg, p, c, t, _T)[0],
+            (params, cache, _tok((_B, _T))),
+            rule="DAK002", where=f"{where}/chunked-prefill")
+
+    # DAK003: the remote KV pools alone (weights untiered) — proves the
+    # paged decode path never gathers a host-resident pool into HBM even
+    # when no weight is offloaded.
+    if "decode" in passes and cfg.family != "ssm":
+        site = f"{where}/kv-pools"
+        plain = surface.abstract_params(cfg)
+        if cfg.family == "hybrid":
+            cache = jax.eval_shape(
+                lambda: {k: v for k, v in M.init_cache(cfg, _B, _T).items()
+                         if k in ("conv", "state")})
+            pools, dargs, kw = _decode_args(cfg)
+            findings += [Finding("DAK003", f.where, f.detail, f.context)
+                         for f in lint_traced(
+                             lambda p, c, pl, *rest: TD.tiered_hybrid_decode_step(
+                                 cfg, p, c, pl, *rest, **kw),
+                             (plain, cache) + dargs,
+                             rule="DAK001", where=site)]
+        else:
+            pools, dargs, kw = _decode_args(cfg)
+            findings += [Finding("DAK003", f.where, f.detail, f.context)
+                         for f in lint_traced(
+                             lambda p, pl, *rest: TD.paged_tiered_decode_step(
+                                 cfg, p, pl, *rest, **kw),
+                             (plain,) + dargs, rule="DAK001", where=site)]
+    return findings

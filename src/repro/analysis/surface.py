@@ -1,0 +1,129 @@
+"""Abstract model surface for the static verifier.
+
+The materialization lint must trace *full-size* configs (llama2-7B …
+deepseek-236B) — smoke shapes dodge the aligned kernel paths — without ever
+allocating their parameters.  ``jax.eval_shape`` gives the param tree as
+``ShapeDtypeStruct`` leaves, and a structural mirror of
+``TieringPlan.partition`` splits those abstract leaves into
+``TieredArray(local, remote)`` pairs (``tiering.partition`` itself calls
+``jnp.split`` and needs real arrays).  Remote-tier leaves are marked with
+the :class:`RemoteLeaf` subclass so the lint can recover, purely from the
+flattened argument list, exactly which jaxpr inputs hold host-resident
+data.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+
+from repro.core import tiering
+from repro.core.engine import TieringPlan
+from repro.models import model as M
+from repro.models.registry import resolve
+
+
+class RemoteLeaf(jax.ShapeDtypeStruct):
+    """A ShapeDtypeStruct marking host-tier (remote) data.
+
+    Instances behave exactly like their base class under ``jax.make_jaxpr``
+    / ``jax.eval_shape``; the subclass only survives *outside* the trace,
+    where :func:`repro.analysis.materialization.remote_mask` reads it."""
+
+
+def _sds(shape: tuple[int, ...], dtype: Any, *, remote: bool) -> jax.ShapeDtypeStruct:
+    cls = RemoteLeaf if remote else jax.ShapeDtypeStruct
+    return cls(tuple(shape), dtype)
+
+
+def abstract_params(cfg) -> Any:
+    """The full-size param tree as ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(
+        lambda key: M.init_params(cfg, key), jax.random.PRNGKey(0))
+
+
+def partition_abstract(cfg, plan: TieringPlan, params: Any = None, *,
+                       align: int = 1) -> Any:
+    """Structural mirror of ``TieringPlan.partition`` over abstract leaves.
+
+    Reuses the plan's registry, ratio lookup, ``lcm(align, P)`` mesh
+    rounding and ``split_sizes`` arithmetic verbatim, so the mirrored
+    extents are exactly what the real partitioner realizes; only the leaf
+    construction differs (abstract split instead of ``jnp.split``)."""
+    if params is None:
+        params = abstract_params(cfg)
+    out = _copy_tree(params)
+    mesh_div = (plan.mesh.n_devices
+                if plan.mesh is not None and plan.mesh.n_devices > 1 else 1)
+    for od in plan.registry:
+        ratio = plan.op_ratios.get(od.op, 0.0)
+        if ratio <= 0.0:
+            continue
+        leaf = resolve(params, od.path)
+        align_eff = od.align if od.align is not None else align
+        align_eff = math.lcm(align_eff, mesh_div)
+        dim = leaf.shape[od.axis]
+        n_local, n_remote = tiering.split_sizes(dim, ratio, align_eff)
+        if n_remote == 0:
+            continue
+        axis = od.axis % len(leaf.shape)
+        local_shape = leaf.shape[:axis] + (n_local,) + leaf.shape[axis + 1:]
+        remote_shape = leaf.shape[:axis] + (n_remote,) + leaf.shape[axis + 1:]
+        _set_path(out, od.path, tiering.TieredArray(
+            local=_sds(local_shape, leaf.dtype, remote=False),
+            remote=_sds(remote_shape, leaf.dtype, remote=True),
+            axis=od.axis))
+    return out
+
+
+def operand_shapes(cfg, params: Any = None) -> dict[str, tuple[int, ...]]:
+    """Registry ``path_str`` -> full (unsplit) leaf shape, abstractly."""
+    from repro.models.registry import operand_registry
+
+    if params is None:
+        params = abstract_params(cfg)
+    shapes: dict[str, tuple[int, ...]] = {}
+    for od in operand_registry(cfg):
+        try:
+            shapes[od.path_str] = tuple(resolve(params, od.path).shape)
+        except (KeyError, TypeError):
+            continue  # registry names an optional leaf this config lacks
+    return shapes
+
+
+def abstract_kv_pools(cfg, *, local_pages: int, remote_pages: int,
+                      page_size: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract ``PagedTieredCache.pools`` with remote pools marked
+    (layout from ``serving.paged_cache``: +1 sink page per pool)."""
+    if getattr(cfg, "use_mla", False):
+        kv_names: tuple[str, ...] = ("k",)
+        kh, hd = 1, cfg.kv_lora_rank + cfg.rope_head_dim
+        n_layers = cfg.n_layers
+    else:
+        kv_names = ("k", "v")
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        n_layers = cfg.n_layers
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            n_layers = cfg.n_layers // cfg.hybrid_attn_every
+    import jax.numpy as jnp
+
+    pools: dict[str, jax.ShapeDtypeStruct] = {}
+    for name in kv_names:
+        for suffix, pages in (("local", local_pages), ("remote", remote_pages)):
+            pools[f"{name}_{suffix}"] = _sds(
+                (n_layers, pages + 1, page_size, kh, hd), jnp.float32,
+                remote=(suffix == "remote"))
+    return pools
+
+
+def _copy_tree(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    return tree
+
+
+def _set_path(tree: dict[str, Any], path: tuple[str, ...], value: Any) -> None:
+    for key in path[:-1]:
+        tree = tree[key]
+    tree[path[-1]] = value

@@ -52,11 +52,12 @@ class TieredArray:
     axis: int = 0
     mesh_axes: str | None = None   # mesh axis sharding `remote` (None = whole)
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[jax.Array, jax.Array],
+                                    tuple[int, str | None]]:
         return (self.local, self.remote), (self.axis, self.mesh_axes)
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux, children) -> "TieredArray":
         return cls(children[0], children[1], axis=aux[0],
                    mesh_axes=aux[1] if len(aux) > 1 else None)
 
@@ -68,7 +69,7 @@ class TieredArray:
         return tuple(s)
 
     @property
-    def dtype(self):
+    def dtype(self) -> jnp.dtype:
         return self.local.dtype
 
     @property

@@ -70,6 +70,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                        ).astype(o_ref.dtype)
 
 
+def vmem_footprint_bytes(
+    hd: int, *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM bytes of one `flash_prefill` launch: q/k/v/output
+    blocks plus the fp32 online-softmax scratch.  Mirrors the BlockSpec and
+    scratch_shapes below (DAK101)."""
+    qo_blocks = 2 * block_q * hd * dtype_bytes
+    kv_blocks = 2 * block_k * hd * dtype_bytes
+    softmax_state = (2 * block_q + block_q * hd) * 4
+    return qo_blocks + kv_blocks + softmax_state
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_prefill(

@@ -6,9 +6,16 @@ import jax.numpy as jnp
 
 
 def splitk_gemm_ref(x: jax.Array, w_local: jax.Array, w_remote: jax.Array) -> jax.Array:
-    """y = x @ concat(w_local, w_remote, axis=1) with fp32 accumulation."""
-    w = jnp.concatenate([w_local, w_remote], axis=1)
-    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+    """y = x @ concat(w_local, w_remote, axis=1) with fp32 accumulation.
+
+    Computed per tier and concatenated on the *output* — a column-split GEMM
+    is exactly decomposable, so this is bitwise-identical to materializing
+    the concatenated weight first, without ever forming an HBM-resident
+    copy of the remote tier (the direct-access invariant; see DAK001)."""
+    xf = x.astype(jnp.float32)
+    y_local = jnp.dot(xf, w_local.astype(jnp.float32))
+    y_remote = jnp.dot(xf, w_remote.astype(jnp.float32))
+    return jnp.concatenate([y_local, y_remote], axis=1).astype(x.dtype)
 
 
 def paged_flashattn_ref(
@@ -58,18 +65,27 @@ def splitk_flashattn_ref(
     v_remote: jax.Array,
     kv_len: int,
 ) -> jax.Array:
-    """Tiered decode attention oracle: standard masked softmax attention over
-    the batch-concatenated cache."""
-    k = jnp.concatenate([k_local, k_remote], axis=0).astype(jnp.float32)
-    v = jnp.concatenate([v_local, v_remote], axis=0).astype(jnp.float32)
-    b, h, hd = q.shape
-    kh = k.shape[2]
-    g = h // kh
-    # group-MAJOR GQA (matches models.layers): q head h -> kv head h % kh
-    qg = q.reshape(b, g, kh, hd).astype(jnp.float32) * (hd ** -0.5)
-    logits = jnp.einsum("bgkh,bskh->bgks", qg, k)
-    mask = jnp.arange(k.shape[1])[None, None, None, :] < kv_len
-    logits = jnp.where(mask, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bgks,bskh->bgkh", probs, v)
-    return out.reshape(b, h, hd).astype(q.dtype)
+    """Tiered decode attention oracle: standard masked softmax attention,
+    batch rows [0, B_loc) served from the local cache and [B_loc, B) from
+    the remote cache.  Batch rows attend independently, so computing each
+    tier's rows separately and concatenating the *outputs* is
+    bitwise-identical to attending over the batch-concatenated cache — and
+    never materializes the remote tier into HBM (DAK001)."""
+
+    def _attend(qt: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+        b, h, hd = qt.shape
+        kh = k.shape[2]
+        g = h // kh
+        # group-MAJOR GQA (matches models.layers): q head h -> kv head h % kh
+        qg = qt.reshape(b, g, kh, hd).astype(jnp.float32) * (hd ** -0.5)
+        logits = jnp.einsum("bgkh,bskh->bgks", qg, k.astype(jnp.float32))
+        mask = jnp.arange(k.shape[1])[None, None, None, :] < kv_len
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgks,bskh->bgkh", probs, v.astype(jnp.float32))
+        return out.reshape(b, h, hd)
+
+    b_loc = k_local.shape[0]
+    out_local = _attend(q[:b_loc], k_local, v_local)
+    out_remote = _attend(q[b_loc:], k_remote, v_remote)
+    return jnp.concatenate([out_local, out_remote], axis=0).astype(q.dtype)

@@ -73,9 +73,11 @@ def _kernel(
                 vl_hbm.at[b, pl.ds(cc * block_s, block_s)],
                 v_vmem.at[slot], vsem.at[slot]).start()
 
+    # s bound per iteration (a late-bound closure would fill every slot
+    # with the last chunk's copy)
     for s in range(n_slots):
         @pl.when(s < n_chunks)
-        def _():
+        def _(s=s):
             start_copy(s, s)
 
     m_ref[...] = jnp.full_like(m_ref, NEG_INF)
@@ -123,6 +125,39 @@ def host_first_batch_order(n_loc: int, n_rem: int) -> np.ndarray:
     return np.concatenate([
         np.arange(n_loc, n_loc + n_rem), np.arange(0, n_loc)
     ]).astype(np.int32)
+
+
+def vmem_footprint_bytes(
+    h: int, kh: int, hd: int, kv_len: int, *,
+    block_s: int = DEFAULT_BLOCK_S,
+    window: int = DEFAULT_WINDOW,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM bytes of one `splitk_flashattn` launch: the q and
+    output blocks, the windowed K/V chunk scratch, and the fp32
+    online-softmax state.  Mirrors scratch_shapes above (DAK101)."""
+    g = max(1, h // kh)
+    n_chunks = max(1, -(-kv_len // block_s))
+    n_slots = min(window, n_chunks)
+    qo_blocks = 2 * h * hd * dtype_bytes
+    kv_scratch = 2 * n_slots * block_s * kh * hd * dtype_bytes
+    softmax_state = (2 * kh * g + kh * g * hd) * 4
+    return qo_blocks + kv_scratch + softmax_state
+
+
+def paged_vmem_footprint_bytes(
+    h: int, kh: int, hd: int, page_size: int, max_pages: int, *,
+    window: int = DEFAULT_WINDOW,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM bytes of one `paged_splitk_flashattn` launch —
+    the paged variant streams page-sized K/V chunks (DAK101)."""
+    g = max(1, h // kh)
+    n_slots = min(window, max_pages)
+    qo_blocks = 2 * h * hd * dtype_bytes
+    kv_scratch = 2 * n_slots * page_size * kh * hd * dtype_bytes
+    softmax_state = (2 * kh * g + kh * g * hd) * 4
+    return qo_blocks + kv_scratch + softmax_state
 
 
 @functools.partial(

@@ -71,10 +71,12 @@ def _kernel(
                           pl.ds(j * block_n, block_n)],
                 w_vmem.at[slot], sem.at[slot]).start()
 
-    # prologue: fill the congestion window
+    # prologue: fill the congestion window (s bound per iteration: the
+    # closure otherwise captures the loop variable by reference and every
+    # @pl.when body would issue the *last* slot's copy)
     for s in range(n_slots):
         @pl.when(s < n_k)
-        def _():
+        def _(s=s):
             start_copy(s, s)
 
     acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -101,6 +103,28 @@ def host_first_order(n_loc_tiles: int, n_rem_tiles: int) -> np.ndarray:
         np.arange(n_loc_tiles, n_loc_tiles + n_rem_tiles),
         np.arange(0, n_loc_tiles),
     ]).astype(np.int32)
+
+
+def vmem_footprint_bytes(
+    m: int, k: int, *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    window: int = DEFAULT_WINDOW,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM bytes one `splitk_gemm` launch holds resident:
+    the x and output blocks plus the windowed weight-tile scratch and the
+    fp32 accumulator.  Mirrors the BlockSpec/scratch_shapes above — the
+    static verifier (DAK101) checks this against the hardware profile, so
+    keep it in lockstep with the kernel."""
+    del m  # the M extent tiles the grid; one block_m row block is resident
+    n_slots = min(window, max(1, k // block_k))
+    x_block = block_m * k * dtype_bytes
+    out_block = block_m * block_n * dtype_bytes
+    w_scratch = n_slots * block_k * block_n * dtype_bytes
+    acc = block_m * block_n * 4
+    return x_block + out_block + w_scratch + acc
 
 
 @functools.partial(

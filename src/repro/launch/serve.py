@@ -152,6 +152,11 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--slo-ttft-ms", type=float, default=None,
                     help="override the interactive class's TTFT SLO for "
                          "synthesized traces (ms, modeled clock)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="audit the paged cache's page-table invariants "
+                         "(repro.analysis, DAK301-305) after every engine "
+                         "step; aborts on the first inconsistency.  Read-only "
+                         "host bookkeeping — tokens and stats are unchanged")
     ap.add_argument("--hbm-shrink", default=None, metavar="STEP:FRAC",
                     help="chaos event: at decode step STEP, shrink the "
                          "modeled HBM page budget to FRAC of the local pool "
@@ -204,7 +209,8 @@ def main(argv: list[str] | None = None) -> dict:
         use_kernels=not args.no_kernels, page_size=args.page_size,
         adaptive=args.adaptive, mesh=mesh,
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
-        clock=ModeledClock() if trace is not None else None)
+        clock=ModeledClock() if trace is not None else None,
+        check_invariants=args.check_invariants)
     if shrink is not None:
         engine.schedule_hbm_shrink(*shrink)
         print(f"chaos: HBM shrink to {shrink[1]:.0%} of the local pool "

@@ -236,6 +236,7 @@ class ServingEngine:
         scheduler: str | Scheduler | None = None,
         prefill_chunk: int | None = None,
         clock: Clock | None = None,
+        check_invariants: bool = False,
     ):
         """``scheduler`` selects the serving frontend policy — a name
         ('fcfs' | 'priority' | 'slo'), a `frontend.scheduler.Scheduler`
@@ -246,7 +247,12 @@ class ServingEngine:
         own chunk budget).  ``clock`` is the lifecycle timestamp source:
         wall time by default, or a `frontend.metrics.ModeledClock` that
         the engine advances by the analytical step latency (trace replay
-        and scheduler comparisons run on the modeled clock)."""
+        and scheduler comparisons run on the modeled clock).
+        ``check_invariants`` audits the paged cache's page-table
+        invariants (``repro.analysis.page_table``, DAK301-305) after
+        every step and raises ``InvariantViolation`` on the first
+        inconsistency — the checks are read-only host-side bookkeeping,
+        so enabling them never changes tokens or stats."""
         self.cfg = cfg
         self.hw = hw
         self.max_batch = max_batch
@@ -322,6 +328,18 @@ class ServingEngine:
         # `healthy` and every counter stays zero.
         self.health = HealthMonitor()
         self._pending_shrink: tuple[int, float] | None = None
+        self.check_invariants = check_invariants
+
+    def _audit_page_table(self) -> None:
+        """Debug hook: fail fast on page-table corruption (DAK301-305)."""
+        if not self.check_invariants or self.pcache is None:
+            return
+        from repro.analysis.page_table import InvariantViolation, check_page_table
+
+        findings = check_page_table(
+            self.pcache, where=f"engine.step[{self.stats.decode_steps}]")
+        if findings:
+            raise InvariantViolation(findings)
 
     @property
     def queue(self) -> deque[Request]:
@@ -783,6 +801,7 @@ class ServingEngine:
                 if nxt is not None:
                     self.clock.advance(max(0.0, nxt - self.clock.now()))
             self._finish_step_health()
+            self._audit_page_table()
             return
         active = np.array([r is not None for r in self.active])
         if self.pcache is not None:
@@ -856,6 +875,7 @@ class ServingEngine:
                     self.pcache.free_slot(slot)
             else:
                 self._next_tok[slot, 0] = tok
+        self._audit_page_table()
 
     def _runtime_step(self, t_step: float, prefill_tokens: int,
                       active: np.ndarray) -> None:

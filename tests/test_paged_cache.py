@@ -26,7 +26,7 @@ def test_write_prompt_roundtrip_property():
     """Seeded-random driver: prompts of every ragged length round-trip
     exactly through the paged layout, local-only and mixed-tier alike."""
     rng = np.random.default_rng(0)
-    for trial in range(20):
+    for _trial in range(20):
         local = int(rng.integers(0, 13))
         remote = 12 - local
         cache = _mk(local, remote, page=4, slots=3, max_pages=4)
