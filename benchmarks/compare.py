@@ -1,0 +1,174 @@
+"""Bench regression gate: diff a candidate ``BENCH_serving.json`` against
+a checked-in baseline with per-metric tolerances.
+
+  PYTHONPATH=src python -m benchmarks.compare \
+      benchmarks/baselines/serving_smoke_slo.json BENCH_serving.json
+
+Exit codes: 0 = within tolerance, 1 = regression (or unexplained schema
+drift), 2 = incomparable (cross-schema / cross-config / cross-clock —
+the provenance stamp refuses nonsense comparisons instead of reporting a
+bogus pass or fail).
+
+Only *deterministic* metrics are gated: counts (served, generated_tokens,
+decode_steps, failed_requests, kv occupancy) must match exactly, and the
+modeled-clock latency/throughput figures move within a relative
+tolerance.  Wall-clock fields (``wall_s``, ``tokens_per_s``, ``tpot_ms``)
+are machine noise and never gated — which is why the baseline replays a
+trace on the modeled clock, where every gated figure is a deterministic
+function of the schedule.
+
+Direction matters: ``higher`` metrics (modeled tokens/s) only fail when
+the candidate drops below baseline by more than the tolerance; ``lower``
+metrics (TTFT/e2e percentiles) only fail when the candidate rises above
+it.  Improvements are reported but never fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any
+
+# Provenance fields that must match for two reports to be comparable.
+# git_rev is informational (the whole point is comparing across
+# revisions); jax version drift is warned about, not refused.
+IDENTITY_FIELDS = ("arch", "config", "clock", "scheduler", "mesh_shape")
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One gated metric: a dotted JSON path with tolerance + direction."""
+
+    path: str
+    direction: str = "exact"     # 'exact' | 'higher' (better) | 'lower'
+    rel_tol: float = 0.0         # allowed relative drift in the bad direction
+    abs_tol: float = 0.0         # absolute floor (small-value noise)
+
+
+# The default gate set for serving runs.  Exact gates pin the schedule
+# itself (any token/count drift is a correctness change, not noise);
+# modeled figures get headroom for legitimate planner/clock tweaks.
+GATES = (
+    Gate("served"),
+    Gate("generated_tokens"),
+    Gate("decode_steps"),
+    Gate("failed_requests"),
+    Gate("scheduling.prefill_chunks"),
+    Gate("scheduling.preemptions"),
+    Gate("kv.spills"),
+    Gate("kv.local_pages_hwm"),
+    Gate("kv.remote_pages_hwm"),
+    Gate("modeled.tokens_per_modeled_s", "higher", rel_tol=0.05),
+    Gate("modeled.makespan_s", "lower", rel_tol=0.05),
+    Gate("ttft_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
+    Gate("queue_delay_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
+    Gate("e2e_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
+)
+
+
+def _lookup(report: dict, path: str) -> Any:
+    node: Any = report
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check_comparable(baseline: dict, candidate: dict) -> list[str]:
+    """Provenance refusals: reasons the two reports cannot be compared."""
+    problems = []
+    sv_b = baseline.get("schema_version")
+    sv_c = candidate.get("schema_version")
+    if sv_b != sv_c:
+        problems.append(f"schema_version mismatch: baseline {sv_b!r} vs "
+                        f"candidate {sv_c!r}")
+    pb = baseline.get("provenance", {})
+    pc = candidate.get("provenance", {})
+    for field in IDENTITY_FIELDS:
+        if pb.get(field) != pc.get(field):
+            problems.append(f"provenance.{field} mismatch: baseline "
+                            f"{pb.get(field)!r} vs candidate "
+                            f"{pc.get(field)!r}")
+    return problems
+
+
+def compare(baseline: dict, candidate: dict,
+            gates: tuple[Gate, ...] = GATES) -> tuple[list[str], list[str]]:
+    """Returns ``(regressions, notes)`` — notes are informational lines
+    (improvements, skipped gates); regressions fail the run."""
+    regressions: list[str] = []
+    notes: list[str] = []
+    for g in gates:
+        b = _lookup(baseline, g.path)
+        c = _lookup(candidate, g.path)
+        if b is None and c is None:
+            continue                       # optional block absent in both
+        if b is None or c is None:
+            regressions.append(
+                f"{g.path}: present in only one report "
+                f"(baseline={b!r}, candidate={c!r})")
+            continue
+        if g.direction == "exact":
+            if b != c:
+                regressions.append(f"{g.path}: {b!r} -> {c!r} (must match "
+                                   f"exactly)")
+            continue
+        b, c = float(b), float(c)
+        slack = max(abs(b) * g.rel_tol, g.abs_tol)
+        delta = c - b
+        if g.direction == "higher" and delta < -slack:
+            regressions.append(
+                f"{g.path}: {b:.6g} -> {c:.6g} "
+                f"({delta / b * 100 if b else 0.0:+.1f}%, allowed "
+                f"-{g.rel_tol * 100:.0f}%)")
+        elif g.direction == "lower" and delta > slack:
+            regressions.append(
+                f"{g.path}: {b:.6g} -> {c:.6g} "
+                f"({delta / b * 100 if b else 0.0:+.1f}%, allowed "
+                f"+{g.rel_tol * 100:.0f}%)")
+        elif abs(delta) > slack:
+            notes.append(f"{g.path}: {b:.6g} -> {c:.6g} (improved)")
+    jb = baseline.get("provenance", {}).get("jax")
+    jc = candidate.get("provenance", {}).get("jax")
+    if jb != jc:
+        notes.append(f"jax version differs (baseline {jb!r}, candidate "
+                     f"{jc!r}) — modeled figures should be unaffected")
+    return regressions, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a candidate BENCH_serving.json against a "
+                    "baseline with per-metric tolerances")
+    ap.add_argument("baseline", help="checked-in baseline report")
+    ap.add_argument("candidate", help="freshly produced report")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.candidate) as fh:
+        candidate = json.load(fh)
+
+    problems = check_comparable(baseline, candidate)
+    if problems:
+        print("incomparable reports:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 2
+
+    regressions, notes = compare(baseline, candidate)
+    for n in notes:
+        print(f"note: {n}")
+    if regressions:
+        print(f"REGRESSION vs {args.baseline}:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"ok: {args.candidate} within tolerance of {args.baseline} "
+          f"({len(GATES)} gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

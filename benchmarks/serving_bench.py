@@ -186,3 +186,57 @@ def collect() -> tuple[list[Row], dict]:
 
 def rows() -> Iterable[Row]:
     return collect()[0]
+
+
+# ---------------------------------------------------------------------------
+# Bench regression baseline (benchmarks/compare.py)
+# ---------------------------------------------------------------------------
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_TRACE = os.path.join("benchmarks", "traces", "smoke_50.json")
+BASELINE_PATH = os.path.join("benchmarks", "baselines",
+                             "serving_smoke_slo.json")
+
+
+def baseline_report() -> dict:
+    """The deterministic report the bench regression gate diffs: the
+    checked-in ``smoke_50`` trace replayed through the SLO scheduler on
+    the modeled clock.  Every gated figure (counts, modeled latencies) is
+    a deterministic function of the schedule — the trace never emits EOS,
+    so generated_tokens cannot drift with sampling either — which is what
+    makes a checked-in baseline meaningful across machines."""
+    from repro.launch.serve import main as serve_main
+
+    return serve_main(TRACE_ARGS + [
+        "--scheduler", "slo", "--trace", os.path.join(ROOT, BASELINE_TRACE),
+        "--bench-json", ""])
+
+
+def main(argv: list[str] | None = None) -> int:
+    """``python -m benchmarks.serving_bench --baseline-out PATH`` writes
+    the regression-gate report (refresh the checked-in baseline with
+    ``--baseline-out benchmarks/baselines/serving_smoke_slo.json`` after
+    an *intended* perf change; CI diffs fresh output against it)."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-out", default=None, metavar="PATH",
+                    help=f"write the smoke_50 SLO replay report here "
+                         f"(checked-in baseline: {BASELINE_PATH})")
+    args = ap.parse_args(argv)
+    if args.baseline_out:
+        rep = baseline_report()
+        # The trace path is machine-local; pin the repo-relative name so
+        # the checked-in baseline is byte-stable across checkouts.
+        rep["trace"] = BASELINE_TRACE
+        with open(args.baseline_out, "w") as fh:
+            json.dump(rep, fh, indent=2, default=float)
+            fh.write("\n")
+        print(f"wrote {args.baseline_out}")
+        return 0
+    for name, _, value in rows():
+        print(f"{name},{value}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,8 @@ import numpy as np
 class Clock:
     """Timestamp source for request lifecycle events."""
 
+    kind = "abstract"      # provenance / trace-metadata tag
+
     def now(self) -> float:
         raise NotImplementedError
 
@@ -39,6 +41,8 @@ class Clock:
 
 
 class WallClock(Clock):
+    kind = "wall"
+
     def now(self) -> float:
         return time.time()
 
@@ -50,6 +54,8 @@ class ModeledClock(Clock):
     """Virtual time advanced by the engine's modeled per-step latency.
 
     Starts at 0.0 so trace arrival offsets are absolute times."""
+
+    kind = "modeled"
 
     def __init__(self, t0: float = 0.0):
         self.t = float(t0)

@@ -65,11 +65,17 @@ class Scheduler:
         self.ready: deque[Request] = deque()
         self._pending: list[tuple[float, int, Request]] = []   # arrival heap
         self._seq = 0
+        # Queue-flow accounting (Prometheus-only observability; never in
+        # the BENCH JSON schema): requests accepted, trace arrivals
+        # released, admissions popped, preemption victims picked.
+        self.flow = {"submitted": 0, "released": 0,
+                     "selected": 0, "victims": 0}
 
     # -- queue plumbing ----------------------------------------------------
     def submit(self, req: Request, now: float) -> None:
         """Accept a request: future trace arrivals wait in the pending
         heap until the clock reaches them, everything else is ready."""
+        self.flow["submitted"] += 1
         arrival = getattr(req, "arrival_s", None)
         if arrival is not None and arrival > now:
             self._seq += 1
@@ -88,6 +94,7 @@ class Scheduler:
             req.t_submit = arrival
             self.ready.append(req)
             n += 1
+        self.flow["released"] += n
         return n
 
     @property
@@ -103,6 +110,7 @@ class Scheduler:
     # -- policy ------------------------------------------------------------
     def select(self, now: float) -> Request:
         """Pop the next request to admit (FCFS: head of the queue)."""
+        self.flow["selected"] += 1
         return self.ready.popleft()
 
     def order_prefilling(
@@ -135,6 +143,19 @@ class Scheduler:
         (None = nobody; FCFS never preempts)."""
         return None
 
+    def register_metrics(self, reg) -> None:
+        """Register queue-flow counters into a
+        `repro.obs.metrics.MetricsRegistry`.  All Prometheus-only
+        (``in_json=False``): the BENCH JSON schema stays frozen."""
+        for name, total in self.flow.items():
+            reg.counter(f"scheduler.{name}",
+                        help=f"scheduler queue flow: {name}",
+                        in_json=False).set_total(total)
+        reg.gauge("scheduler.ready", "requests awaiting admission",
+                  in_json=False).set(len(self.ready))
+        reg.gauge("scheduler.pending", "future trace arrivals",
+                  in_json=False).set(len(self._pending))
+
 
 class PriorityScheduler(Scheduler):
     """Strict priority (higher ``Request.priority`` first), FIFO within a
@@ -152,6 +173,7 @@ class PriorityScheduler(Scheduler):
         return (-req.priority, req.t_submit, req.rid)
 
     def select(self, now: float) -> Request:
+        self.flow["selected"] += 1
         best = min(self.ready, key=self._select_key)
         self.ready.remove(best)
         return best
@@ -171,6 +193,7 @@ class PriorityScheduler(Scheduler):
         # the least work and its tail pages are the ones heat will reload).
         slot, _ = min(victims,
                       key=lambda sr: (sr[1].priority, -sr[1].t_submit))
+        self.flow["victims"] += 1
         return slot
 
 
@@ -211,6 +234,7 @@ class SLOScheduler(PriorityScheduler):
         slot, _ = max(victims,
                       key=lambda sr: (_deadline(sr[1]), -sr[1].priority,
                                       sr[1].t_submit))
+        self.flow["victims"] += 1
         return slot
 
 

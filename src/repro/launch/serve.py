@@ -42,64 +42,42 @@ from repro.frontend.metrics import ModeledClock
 from repro.frontend.scheduler import scheduler_names
 from repro.frontend.workload import Trace, poisson_trace
 from repro.models import model as M
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import BENCH_SCHEMA_VERSION, provenance, serving_registry
+from repro.obs.trace import ChromeTraceRecorder
 from repro.serving.engine import Request, ServingEngine
 
 
-def bench_report(args, engine: ServingEngine, stats, wall: float) -> dict:
-    """The BENCH_serving.json schema: one flat dict per serving run."""
-    report = {
+def _bench_registry(args, engine: ServingEngine, stats, wall: float):
+    """The metrics registry behind one serving run's report (the single
+    producer of the BENCH stats block and the Prometheus exposition)."""
+    return serving_registry(engine, stats, wall, meta={
         "arch": args.arch,
         "smoke": bool(args.smoke),
         "adaptive": bool(args.adaptive),
-        "scheduler": engine.scheduler.name,
-        "prefill_chunk": engine.scheduler.chunk_tokens,
-        "trace": args.trace or ("poisson" if args.arrival_rate else None),
-        "mesh_shape": engine.mesh_shape,
+        "trace": args.trace or ("poisson"
+                                if getattr(args, "arrival_rate", None)
+                                else None),
         "requests": args.requests,
-        "served": stats.served,
-        "global_ratio": engine.plan.global_ratio,
-        "wall_s": wall,
-        "generated_tokens": stats.generated_tokens,
-        # tokens *actually emitted* (early-EOS requests count what they
-        # produced, not their budget) per wall second
-        "tokens_per_s": stats.generated_tokens / wall if wall > 0 else 0.0,
-        "tpot_ms": stats.tpot * 1e3,
-        "ttft_p50_ms": stats.ttft_p50 * 1e3,
-        "ttft_p95_ms": stats.ttft_p95 * 1e3,
-        "queue_delay_p50_ms": stats.queue_delay_p50 * 1e3,
-        "queue_delay_p95_ms": stats.queue_delay_p95 * 1e3,
-        "e2e_p50_ms": stats.e2e_p50 * 1e3,
-        "e2e_p95_ms": stats.e2e_p95 * 1e3,
-        "decode_steps": stats.decode_steps,
-        "scheduling": {
-            "prefill_chunks": stats.prefill_chunks,
-            "preemptions": stats.preemptions,
-            "preempt_demoted_pages": stats.preempt_demoted_pages,
-            "slo": stats.slo_report(),
-        },
-        "kv": {
-            "spills": stats.spills,
-            "local_pages_hwm": stats.local_pages_hwm,
-            "remote_pages_hwm": stats.remote_pages_hwm,
-        },
-        # Elastic degradation (never-OOM): failed_requests is asserted ==0
-        # by the CI chaos-smoke job; the health block records how the
-        # engine degraded instead of failing.
-        "failed_requests": stats.failed_requests,
-        "elastic": engine.health.report(),
-        "window": {"static": engine.plan.window.n_inflight,
-                   "final": stats.final_window},
-    }
-    if isinstance(engine.clock, ModeledClock):
-        mk = engine.clock.now()
-        report["modeled"] = {
-            "makespan_s": mk,
-            "tokens_per_modeled_s": stats.generated_tokens / mk if mk else 0.0,
-        }
-    if engine.mesh is not None:
-        report["mesh_traffic"] = engine.mesh_traffic_report()
-    if engine.runtime is not None:
-        report["runtime"] = engine.runtime.report()
+    })
+
+
+def bench_report(args, engine: ServingEngine, stats, wall: float,
+                 reg=None) -> dict:
+    """The BENCH_serving.json schema: one flat dict per serving run.
+
+    Produced by the unified metrics registry (`repro.obs.metrics`): every
+    subsystem registers its counters and :meth:`MetricsRegistry.nested`
+    emits them in the legacy field order, byte-identical to the hand-built
+    dict this function used to assemble.  The only additions sit at the
+    *end* of the dict: ``schema_version`` and the ``provenance`` stamp
+    (git revision, config, clock type) that lets `benchmarks/compare.py`
+    refuse cross-schema / cross-config comparisons."""
+    if reg is None:
+        reg = _bench_registry(args, engine, stats, wall)
+    report = reg.nested()
+    report["schema_version"] = BENCH_SCHEMA_VERSION
+    report["provenance"] = provenance(engine, arch=args.arch)
     return report
 
 
@@ -157,6 +135,22 @@ def main(argv: list[str] | None = None) -> dict:
                          "(repro.analysis, DAK301-305) after every engine "
                          "step; aborts on the first inconsistency.  Read-only "
                          "host bookkeeping — tokens and stats are unchanged")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(per-step phase spans, per-request lifecycle "
+                         "tracks, per-link counter tracks; load in "
+                         "Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "run's metrics registry")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="attach the flight recorder: keep a bounded ring "
+                         "of per-step state snapshots and dump a "
+                         "post-mortem bundle here on a crash, an "
+                         "InvariantViolation, or an SLO breach")
+    ap.add_argument("--flight-slo-breach-ms", type=float, default=None,
+                    help="with --flight-dir: dump a bundle the first time "
+                         "a request's TTFT exceeds this (engine-clock ms)")
     ap.add_argument("--hbm-shrink", default=None, metavar="STEP:FRAC",
                     help="chaos event: at decode step STEP, shrink the "
                          "modeled HBM page budget to FRAC of the local pool "
@@ -202,6 +196,18 @@ def main(argv: list[str] | None = None) -> dict:
             args.requests, rate_rps=args.arrival_rate, classes=classes,
             prompt_max=max(4, args.max_len - args.new_tokens - 2),
             out_max=args.new_tokens, seed=0)
+    recorder = None
+    if args.trace_out:
+        recorder = ChromeTraceRecorder(metadata={
+            "arch": args.arch,
+            "scheduler": args.scheduler,
+            "clock": "modeled" if trace is not None else "wall"})
+    flight = None
+    if args.flight_dir:
+        flight = FlightRecorder(
+            args.flight_dir,
+            slo_breach_s=(args.flight_slo_breach_ms / 1e3
+                          if args.flight_slo_breach_ms is not None else None))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
@@ -210,7 +216,8 @@ def main(argv: list[str] | None = None) -> dict:
         adaptive=args.adaptive, mesh=mesh,
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
         clock=ModeledClock() if trace is not None else None,
-        check_invariants=args.check_invariants)
+        check_invariants=args.check_invariants,
+        recorder=recorder, flight=flight)
     if shrink is not None:
         engine.schedule_hbm_shrink(*shrink)
         print(f"chaos: HBM shrink to {shrink[1]:.0%} of the local pool "
@@ -288,11 +295,22 @@ def main(argv: list[str] | None = None) -> dict:
               f"adaptive {mod['adaptive_tokens_per_s']:.3g} "
               f"(gain {mod['gain']:.3f})")
 
-    report = bench_report(args, engine, stats, wall)
+    reg = _bench_registry(args, engine, stats, wall)
+    report = bench_report(args, engine, stats, wall, reg=reg)
     if args.bench_json:
         with open(args.bench_json, "w") as fh:
             json.dump(report, fh, indent=2, default=float)
         print(f"wrote {args.bench_json}")
+    if args.trace_out:
+        recorder.save(args.trace_out)
+        print(f"wrote {args.trace_out} "
+              f"({len(recorder.events)} trace events)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(reg.to_prometheus())
+        print(f"wrote {args.metrics_out}")
+    if flight is not None and flight.dumped:
+        print(f"flight bundles: {', '.join(flight.dumped)}")
     return report
 
 

@@ -1,0 +1,47 @@
+"""End-to-end observability for the DAK serving stack.
+
+* :mod:`repro.obs.trace` — Chrome trace-event (Perfetto-loadable) span /
+  counter recorder the engine's step loop emits into;
+* :mod:`repro.obs.metrics` — the unified metrics registry (counters /
+  gauges / histograms, Prometheus text + JSON snapshot) that produces
+  ``BENCH_serving.json``'s stats block;
+* :mod:`repro.obs.flight` — flight recorder: last-N-steps state ring
+  dumped as a post-mortem bundle on invariant violations, crashes, or
+  SLO breaches;
+* ``python -m repro.obs`` — summarize / validate / convert tooling.
+"""
+from repro.obs.flight import FlightRecorder, load_bundle, summarize_bundle
+from repro.obs.metrics import (
+    BENCH_SCHEMA_VERSION,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    provenance,
+    serving_registry,
+)
+from repro.obs.trace import (
+    NULL_RECORDER,
+    ChromeTraceRecorder,
+    TraceRecorder,
+    summarize_trace,
+    validate_trace,
+)
+
+__all__ = [
+    "BENCH_SCHEMA_VERSION",
+    "ChromeTraceRecorder",
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_RECORDER",
+    "TraceRecorder",
+    "load_bundle",
+    "provenance",
+    "serving_registry",
+    "summarize_bundle",
+    "summarize_trace",
+    "validate_trace",
+]

@@ -264,6 +264,11 @@ class RuntimeController:
         self._static_window = plan.window.n_inflight
         self.stats = RuntimeStats(
             window_min=self.window, window_max=self.window)
+        # Observability hook: called as on_event(name, **args) when a
+        # control action actually fires ('migrate' with promoted/demoted,
+        # 'replan' with reason/ratio/mix).  The serving engine points it at
+        # the trace recorder; None (the default) costs nothing.
+        self.on_event = None
 
     @property
     def window(self) -> int:
@@ -340,6 +345,8 @@ class RuntimeController:
                 rep = migration_mod.MigrationReport()
             self.stats.promoted_pages += rep.promoted
             self.stats.demoted_pages += rep.demoted
+            if rep.moved and self.on_event is not None:
+                self.on_event("migrate", **rep.as_args())
 
         new_plan = self.replanner.maybe_replan(self.telemetry)
         if new_plan is not None:
@@ -348,6 +355,10 @@ class RuntimeController:
             if params is not None:
                 params, _ = replan_mod.repartition(
                     params, new_plan, align=self.align)
+            if self.on_event is not None:
+                self.on_event("replan", reason=self.replanner.last_reason,
+                              ratio=new_plan.global_ratio,
+                              mix=self.replanner.planned_mix)
         return params
 
     def elastic_replan(self, local_fraction: float,
@@ -366,6 +377,10 @@ class RuntimeController:
         if params is not None:
             params, _ = replan_mod.repartition(
                 params, new_plan, align=self.align)
+        if self.on_event is not None:
+            self.on_event("replan", reason=self.replanner.last_reason,
+                          ratio=new_plan.global_ratio,
+                          mix=self.replanner.planned_mix)
         return params
 
     def report(self) -> dict:
@@ -389,3 +404,30 @@ class RuntimeController:
             },
             "telemetry": self.telemetry.report(),
         }
+
+    def register_metrics(self, reg, prefix: str = "runtime") -> None:
+        """Register the runtime summary into a
+        `repro.obs.metrics.MetricsRegistry` — field order mirrors
+        :meth:`report` so the registry's JSON view is byte-identical to
+        the hand-built ``runtime`` block it replaces."""
+        reg.gauge(f"{prefix}.window.static",
+                  help="static congestion-window seed").set(self._static_window)
+        reg.gauge(f"{prefix}.window.final",
+                  help="final congestion window").set(self.window)
+        reg.gauge(f"{prefix}.window.min").set(self.stats.window_min)
+        reg.gauge(f"{prefix}.window.max").set(self.stats.window_max)
+        reg.const(f"{prefix}.window.converged",
+                  all(c.converged for c in self.link_controllers))
+        reg.const(f"{prefix}.window.per_link", list(self.windows))
+        reg.counter(f"{prefix}.replans",
+                    help="adaptive re-plans fired").set_total(self.stats.replans)
+        reg.counter(f"{prefix}.migration.promoted").set_total(
+            self.stats.promoted_pages)
+        reg.counter(f"{prefix}.migration.demoted").set_total(
+            self.stats.demoted_pages)
+        reg.gauge(f"{prefix}.modeled.static_tokens_per_s").set(
+            self.stats.modeled_static_tps)
+        reg.gauge(f"{prefix}.modeled.adaptive_tokens_per_s").set(
+            self.stats.modeled_adaptive_tps)
+        reg.gauge(f"{prefix}.modeled.gain").set(self.stats.modeled_gain)
+        self.telemetry.register_metrics(reg, prefix=f"{prefix}.telemetry")

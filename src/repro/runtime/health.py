@@ -70,6 +70,12 @@ class HealthMonitor:
         self.recover_steps = recover_steps
         self.counters = ElasticCounters()
         self.transitions: list[tuple[int, str, str]] = []
+        # Observability hook: called as listener(event, **info) on every
+        # elastic event ('pressure', kind=..., pages=...) and ladder move
+        # ('transition', src=..., dst=...).  The serving engine points it
+        # at the trace recorder; None (the default) keeps the monitor
+        # pure-stdlib with zero overhead.
+        self.listener = None
         self._clean = 0                # consecutive event-free steps
         self._step_events = 0          # events since the last observe()
         self._step = 0
@@ -77,6 +83,8 @@ class HealthMonitor:
     def _transition(self, state: str) -> None:
         if state != self.state:
             self.transitions.append((self._step, self.state, state))
+            if self.listener is not None:
+                self.listener("transition", src=self.state, dst=state)
             self.state = state
 
     # -- event ingestion ---------------------------------------------------
@@ -100,6 +108,8 @@ class HealthMonitor:
             c.elastic_replans += 1
         else:
             raise ValueError(f"unknown pressure kind {kind!r}")
+        if self.listener is not None:
+            self.listener("pressure", kind=kind, pages=pages)
         if kind != "replan":           # replans are a response, not pressure
             self._step_events += 1
             self._clean = 0
@@ -144,3 +154,21 @@ class HealthMonitor:
             "elastic_replans": c.elastic_replans,
             "transitions": [list(t) for t in self.transitions],
         }
+
+    def register_metrics(self, reg, prefix: str = "elastic") -> None:
+        """Register the elastic counters into a
+        `repro.obs.metrics.MetricsRegistry` — field order mirrors
+        :meth:`report` so the registry's JSON view is byte-identical to
+        the hand-built ``elastic`` block it replaces."""
+        c = self.counters
+        reg.const(f"{prefix}.state", self.state, "final health state")
+        for name, total in (
+                ("cache_full_caught", c.cache_full_caught),
+                ("elastic_demoted_pages", c.elastic_demoted_pages),
+                ("remote_grown_pages", c.remote_grown_pages),
+                ("shrink_events", c.shrink_events),
+                ("shed_steps", c.shed_steps),
+                ("elastic_replans", c.elastic_replans)):
+            reg.counter(f"{prefix}.{name}").set_total(total)
+        reg.const(f"{prefix}.transitions",
+                  [list(t) for t in self.transitions])

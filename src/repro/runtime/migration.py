@@ -32,6 +32,10 @@ class MigrationReport:
     def moved(self) -> int:
         return self.promoted + self.demoted
 
+    def as_args(self) -> dict:
+        """Trace-event args for one migration pass (observability layer)."""
+        return {"promoted": self.promoted, "demoted": self.demoted}
+
 
 class Migrator:
     """Promote hot remote pages / demote cold local pages, within budget."""

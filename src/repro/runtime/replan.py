@@ -64,6 +64,9 @@ class Replanner:
         # steady-state decode solve (prefill fraction 0).
         self.planned_mix = 0.0
         self.replans = 0
+        # Why the last re-plan fired ('drift' | 'forced'), with the ratio
+        # it landed on — trace-event args for the observability layer.
+        self.last_reason: str | None = None
         self._last_replan_step = -(10 ** 9)
 
     def drift(self, telemetry: Telemetry) -> float:
@@ -107,6 +110,7 @@ class Replanner:
         self.planned_mix = telemetry.prefill_fraction
         self.plan = new
         self.replans += 1
+        self.last_reason = "drift"
         self._last_replan_step = telemetry.total_steps
         return new
 
@@ -144,6 +148,7 @@ class Replanner:
             kv_page_size=page_size, mesh=mesh_spec)
         self.plan = new
         self.replans += 1
+        self.last_reason = "forced"
         self._last_replan_step = telemetry.total_steps
         return new
 

@@ -90,6 +90,14 @@ from repro.frontend.metrics import (
 )
 from repro.frontend.scheduler import Scheduler, get_scheduler
 from repro.models import model as M
+from repro.obs.trace import (
+    ENGINE,
+    HEALTH_LEVEL,
+    LINKS,
+    NULL_RECORDER,
+    REQUESTS,
+    TraceRecorder,
+)
 from repro.runtime.controller import RuntimeController
 from repro.runtime.health import HEALTHY, HealthMonitor
 from repro.runtime.telemetry import (
@@ -215,6 +223,39 @@ class EngineStats:
 
         return slo_report(self.requests)
 
+    def register_metrics(self, reg, *, global_ratio: float,
+                         wall_s: float) -> None:
+        """Register the serving counters into a
+        `repro.obs.metrics.MetricsRegistry`.  Registration order mirrors
+        the legacy ``launch.serve.bench_report`` fields exactly, so the
+        registry's JSON view is byte-identical to the hand-built stats
+        block it replaces (pinned by tests/test_obs.py)."""
+        reg.counter("served", "requests finished").set_total(self.served)
+        reg.gauge("global_ratio",
+                  "planned global offload ratio").set(global_ratio)
+        reg.gauge("wall_s", "run wall time").set(wall_s)
+        reg.counter("generated_tokens",
+                    "tokens actually emitted").set_total(self.generated_tokens)
+        reg.gauge("tokens_per_s").set(
+            self.generated_tokens / wall_s if wall_s > 0 else 0.0)
+        reg.gauge("tpot_ms", "mean time per output token").set(self.tpot * 1e3)
+        reg.gauge("ttft_p50_ms").set(self.ttft_p50 * 1e3)
+        reg.gauge("ttft_p95_ms").set(self.ttft_p95 * 1e3)
+        reg.gauge("queue_delay_p50_ms").set(self.queue_delay_p50 * 1e3)
+        reg.gauge("queue_delay_p95_ms").set(self.queue_delay_p95 * 1e3)
+        reg.gauge("e2e_p50_ms").set(self.e2e_p50 * 1e3)
+        reg.gauge("e2e_p95_ms").set(self.e2e_p95 * 1e3)
+        reg.counter("decode_steps").set_total(self.decode_steps)
+        reg.counter("scheduling.prefill_chunks").set_total(self.prefill_chunks)
+        reg.counter("scheduling.preemptions").set_total(self.preemptions)
+        reg.counter("scheduling.preempt_demoted_pages").set_total(
+            self.preempt_demoted_pages)
+        reg.const("scheduling.slo", self.slo_report())
+        reg.counter("kv.spills").set_total(self.spills)
+        reg.gauge("kv.local_pages_hwm").set(self.local_pages_hwm)
+        reg.gauge("kv.remote_pages_hwm").set(self.remote_pages_hwm)
+        reg.counter("failed_requests").set_total(self.failed_requests)
+
 
 class ServingEngine:
     def __init__(
@@ -237,6 +278,8 @@ class ServingEngine:
         prefill_chunk: int | None = None,
         clock: Clock | None = None,
         check_invariants: bool = False,
+        recorder: TraceRecorder | None = None,
+        flight=None,
     ):
         """``scheduler`` selects the serving frontend policy — a name
         ('fcfs' | 'priority' | 'slo'), a `frontend.scheduler.Scheduler`
@@ -252,7 +295,12 @@ class ServingEngine:
         invariants (``repro.analysis.page_table``, DAK301-305) after
         every step and raises ``InvariantViolation`` on the first
         inconsistency — the checks are read-only host-side bookkeeping,
-        so enabling them never changes tokens or stats."""
+        so enabling them never changes tokens or stats.  ``recorder`` is
+        an `obs.trace.TraceRecorder` (default: the no-op null recorder —
+        the serving path is bitwise-identical with tracing off) and
+        ``flight`` an `obs.flight.FlightRecorder` that keeps a bounded
+        ring of per-step state snapshots and dumps a post-mortem bundle
+        when a run dies or breaches its SLO."""
         self.cfg = cfg
         self.hw = hw
         self.max_batch = max_batch
@@ -329,6 +377,39 @@ class ServingEngine:
         self.health = HealthMonitor()
         self._pending_shrink: tuple[int, float] | None = None
         self.check_invariants = check_invariants
+        # Observability: both default off (NULL_RECORDER's emissions are
+        # no-ops, flight=None records nothing), and every emission site is
+        # guarded, so the disabled engine is bitwise-identical (pinned by
+        # the parity test in tests/test_obs.py).
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self.flight = flight
+        self._slo_dumped = False
+        if self.recorder.enabled:
+            self._wire_observability()
+
+    def _wire_observability(self) -> None:
+        """Point the health monitor's and runtime controller's event hooks
+        at the trace recorder.  The hooks default to None, so with tracing
+        off neither component ever makes a call."""
+        rec = self.recorder
+        rec.name_thread(ENGINE, 0, "step")
+
+        def on_health(event: str, **info) -> None:
+            t = self.clock.now()
+            if event == "transition":
+                rec.instant(ENGINE, 0, f"health:{info['src']}->{info['dst']}",
+                            t, cat="health")
+            else:
+                rec.instant(ENGINE, 0, f"pressure:{info['kind']}", t,
+                            cat="elastic", pages=info.get("pages", 0))
+
+        self.health.listener = on_health
+        if self.runtime is not None:
+            def on_runtime(name: str, **args) -> None:
+                rec.instant(ENGINE, 0, name, self.clock.now(),
+                            cat="runtime", **args)
+
+            self.runtime.on_event = on_runtime
 
     def _audit_page_table(self) -> None:
         """Debug hook: fail fast on page-table corruption (DAK301-305)."""
@@ -381,6 +462,12 @@ class ServingEngine:
         if req.arrival_s is not None:
             req.arrival_s = self._t0 + req.arrival_s
         req.t_submit = now
+        if self.recorder.enabled:
+            self.recorder.name_thread(REQUESTS, req.rid, f"req{req.rid}")
+            self.recorder.instant(
+                REQUESTS, req.rid, "submit",
+                req.arrival_s if req.arrival_s is not None else now,
+                cat="lifecycle", cls=req.cls, prompt=len(req.prompt))
         self.scheduler.submit(req, now)
 
     def _free_slots(self) -> list[int]:
@@ -444,6 +531,13 @@ class ServingEngine:
             req.t_admit = now
             req.admitted_degraded = self.health.state != HEALTHY
             self.stats.queue_delays.append(req.t_admit - req.t_submit)
+            if self.recorder.enabled:
+                self.recorder.span(REQUESTS, req.rid, "queued",
+                                   req.t_submit, now, cat="lifecycle")
+                if req.admitted_degraded:
+                    self.recorder.instant(
+                        REQUESTS, req.rid, "admitted_degraded", now,
+                        cat="lifecycle", health=self.health.state)
             if quota is not None:
                 quota -= 1
             if self.pcache is not None and sched.preemptive:
@@ -470,6 +564,7 @@ class ServingEngine:
         req = ps.req
         self._prefill_calls_step += 1
         t0 = time.time()
+        tc0 = self.clock.now() if self.recorder.enabled else 0.0
         chunk = jnp.asarray(req.prompt[ps.pos:ps.pos + n], jnp.int32)[None, :]
         if ps.pos == 0 and n == len(req.prompt):
             ps.logits, ps.cache = M.prefill(
@@ -484,6 +579,10 @@ class ServingEngine:
         ps.pos += n
         self.stats.prefill_time += time.time() - t0
         self._clock_tick_prefill(n)
+        if self.recorder.enabled:
+            self.recorder.span(ENGINE, 0, f"prefill[{req.rid}]", tc0,
+                               self.clock.now(), cat="prefill", slot=slot,
+                               tokens=n, pos=ps.pos)
         if ps.pos < len(req.prompt):
             return
         del self.prefilling[slot]
@@ -492,6 +591,18 @@ class ServingEngine:
         self.stats.generated_tokens += 1
         req.t_first = self.clock.now()
         self.stats.ttfts.append(req.t_first - req.t_submit)
+        if self.recorder.enabled:
+            self.recorder.instant(REQUESTS, req.rid, "first_token",
+                                  req.t_first, cat="lifecycle",
+                                  ttft_s=req.t_first - req.t_submit)
+        if (self.flight is not None and not self._slo_dumped
+                and self.flight.breached(req.t_first - req.t_submit)):
+            # One post-mortem per run: the first SLO breach captures the
+            # window that caused it; later breaches are the same story.
+            self._slo_dumped = True
+            self.flight.dump("slo_breach",
+                             final_snapshot=self._flight_snapshot(),
+                             recorder=self.recorder)
         if nxt == req.eos_id or req.max_new_tokens <= 1:
             self._finish_request(req)      # slot stays free for the next
             return
@@ -511,6 +622,11 @@ class ServingEngine:
 
     def _finish_request(self, req: Request) -> None:
         req.t_done = self.clock.now()
+        if self.recorder.enabled:
+            self.recorder.span(REQUESTS, req.rid, "active", req.t_admit,
+                               req.t_done, cat="lifecycle",
+                               tokens=len(req.out_tokens),
+                               preemptions=req.preemptions)
         self.stats.served += 1
         self.stats.e2e_latencies.append(req.t_done - req.t_submit)
         self.stats.requests.append(RequestRecord(
@@ -568,6 +684,11 @@ class ServingEngine:
             self.stats.preemptions += 1
             self.stats.preempt_demoted_pages += moved
             self._preempt_moved_step += moved
+            if self.recorder.enabled:
+                self.recorder.instant(
+                    REQUESTS, self.active[victim].rid, "preempted",
+                    self.clock.now(), cat="lifecycle", pages=moved,
+                    by=incoming.rid)
 
     # -- elastic degradation (never-OOM) ------------------------------------
     def schedule_hbm_shrink(self, step: int, fraction: float) -> None:
@@ -777,7 +898,9 @@ class ServingEngine:
         own position).  With the adaptive runtime attached, the in-flight
         DMA window is re-read from the controller every step and a
         telemetry sample is reported after the compute."""
-        t_step = time.time()
+        t_step_clock = self.clock.now()    # engine-clock step origin: wall
+        #                                    seconds on WallClock, modeled
+        #                                    seconds on ModeledClock replays
         self._step_params = None           # new step, new fetch
         self._preempt_moved_step = 0
         if self.runtime is not None:
@@ -788,10 +911,15 @@ class ServingEngine:
             self._pending_shrink = None
             self.shrink_local_budget(frac)
         self._elastic_step()               # drain any local-budget deficit
+        t_admit0 = self.clock.now() if self.recorder.enabled else 0.0
         prefill_tokens = self._admit()
+        if self.recorder.enabled:
+            self.recorder.span(ENGINE, 0, "admission", t_admit0,
+                               self.clock.now(), cat="sched",
+                               prefill_tokens=prefill_tokens)
         if not any(r is not None for r in self.active):
             if prefill_tokens:
-                self._runtime_step(t_step, prefill_tokens,
+                self._runtime_step(t_step_clock, prefill_tokens,
                                    np.zeros(self.max_batch, dtype=bool))
             elif not self.prefilling and self.scheduler.waiting:
                 # Idle but a trace arrival is pending: fast-forward the
@@ -801,6 +929,8 @@ class ServingEngine:
                 if nxt is not None:
                     self.clock.advance(max(0.0, nxt - self.clock.now()))
             self._finish_step_health()
+            if self.flight is not None:
+                self.flight.record(self._flight_snapshot())
             self._audit_page_table()
             return
         active = np.array([r is not None for r in self.active])
@@ -811,6 +941,7 @@ class ServingEngine:
             self.pcache.touch_step(self.lens, active)
         tokens = jnp.asarray(self._next_tok)
         positions = np.where(active, self.lens, 0).astype(np.int32)
+        tc0 = self.clock.now() if self.recorder.enabled else 0.0
         t0 = time.time()
         if not self.tiered:
             logits, self.cache = M.decode_step(
@@ -854,7 +985,11 @@ class ServingEngine:
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
         self._clock_tick_decode(active)
-        self._runtime_step(t_step, prefill_tokens, active)
+        if self.recorder.enabled:
+            self.recorder.span(ENGINE, 0, "decode", tc0, self.clock.now(),
+                               cat="decode", slots=int(active.sum()),
+                               step=self.stats.decode_steps)
+        self._runtime_step(t_step_clock, prefill_tokens, active)
         self._finish_step_health()
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
         for slot, req in enumerate(self.active):
@@ -875,14 +1010,25 @@ class ServingEngine:
                     self.pcache.free_slot(slot)
             else:
                 self._next_tok[slot, 0] = tok
+        if self.flight is not None:
+            self.flight.record(self._flight_snapshot())
         self._audit_page_table()
 
-    def _runtime_step(self, t_step: float, prefill_tokens: int,
+    def _runtime_step(self, t_step_clock: float, prefill_tokens: int,
                       active: np.ndarray) -> None:
         """Report one step to the adaptive runtime and apply its actions:
         window update (read back at the top of the next step), bounded page
-        migration, and — on a re-plan — the repartitioned params tree."""
-        if self.runtime is None:
+        migration, and — on a re-plan — the repartitioned params tree.
+        With tracing on, the same per-step accounting also feeds the
+        counter tracks (per-link bytes, window, queue depth, deficit,
+        health), runtime attached or not.
+
+        ``t_step_clock`` is the step origin on the *engine clock*, so the
+        telemetry ``duration_s`` is wall seconds on a WallClock run and
+        modeled seconds on a ModeledClock replay — one time base per run,
+        never mixed (trace replays used to stamp wall durations here,
+        which made achieved-bandwidth figures nondeterministic noise)."""
+        if self.runtime is None and not self.recorder.enabled:
             return
         n_active = int(active.sum())
         # Traffic accounting: decode reads every weight once per step, each
@@ -902,7 +1048,7 @@ class ServingEngine:
             link_b = [a + b for a, b in zip(link_b, kv_links)]
         sample = StepSample(
             step=self.stats.decode_steps,
-            duration_s=max(time.time() - t_step, 1e-9),
+            duration_s=max(self.clock.now() - t_step_clock, 1e-9),
             prefill_tokens=prefill_tokens,
             decode_tokens=n_active,
             queue_depth=len(self.queue),
@@ -915,6 +1061,19 @@ class ServingEngine:
             health=self.health.state,
             local_deficit=(self.pcache.local_deficit
                            if self.pcache is not None else 0))
+        if self.recorder.enabled:
+            rec, t = self.recorder, self.clock.now()
+            rec.counter(LINKS, "link_bytes", t,
+                        {f"link{i}": b for i, b in enumerate(link_b)})
+            rec.counter(LINKS, "window", t, {"slots": self.window})
+            rec.counter(LINKS, "queue_depth", t,
+                        {"requests": sample.queue_depth})
+            rec.counter(LINKS, "local_deficit", t,
+                        {"pages": sample.local_deficit})
+            rec.counter(LINKS, "health", t,
+                        {"level": HEALTH_LEVEL.get(self.health.state, -1)})
+        if self.runtime is None:
+            return
         new_params = self.runtime.on_step(
             sample, cache=self.pcache, params=self.params,
             migration_used=self._preempt_moved_step)
@@ -926,6 +1085,32 @@ class ServingEngine:
         self.stats.demoted_pages = rs.demoted_pages
         self.stats.final_window = self.runtime.window
         self._note_occupancy()
+
+    def _flight_snapshot(self) -> dict:
+        """One step's engine state for the flight-recorder ring (plain
+        JSON-serializable host values — no arrays, no jax)."""
+        snap: dict[str, Any] = {
+            "step": self.stats.decode_steps,
+            "clock_s": self.clock.now(),
+            "health": self.health.state,
+            "window": self.window,
+            "waiting": self.scheduler.waiting,
+            "prefilling": sorted(self.prefilling),
+            "active": [r.rid if r is not None else None for r in self.active],
+            "lens": self.lens.tolist(),
+            "served": self.stats.served,
+            "generated_tokens": self.stats.generated_tokens,
+        }
+        if self.pcache is not None:
+            snap["pages"] = {
+                "local_in_use": self.pcache.local_in_use,
+                "remote_in_use": self.pcache.remote_in_use,
+                "local_free": self.pcache.local_free,
+                "remote_free": len(self.pcache.free[REMOTE]),
+                "local_deficit": self.pcache.local_deficit,
+                "spills": self.pcache.spills,
+            }
+        return snap
 
     @property
     def mesh_shape(self) -> list[int]:
@@ -957,8 +1142,18 @@ class ServingEngine:
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.scheduler.waiting or self.prefilling
-               or any(r is not None for r in self.active)) and steps < max_steps:
-            self.step()
-            steps += 1
+        try:
+            while (self.scheduler.waiting or self.prefilling
+                   or any(r is not None
+                          for r in self.active)) and steps < max_steps:
+                self.step()
+                steps += 1
+        except Exception as e:
+            # Post-mortem: dump the flight ring (plus a snapshot of the
+            # state the failing step left behind) before surfacing.
+            if self.flight is not None:
+                self.flight.dump(type(e).__name__, error=str(e),
+                                 final_snapshot=self._flight_snapshot(),
+                                 recorder=self.recorder)
+            raise
         return self.stats

@@ -1,0 +1,202 @@
+"""Runtime telemetry internals: ring wraparound, EMA warm-up, per-link
+byte resolution, and the page-touch histogram's decay/temperature
+ordering — the measurement plane the adaptive runtime and the
+observability layer both read from.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.telemetry import (
+    PageTouchHistogram,
+    StepSample,
+    Telemetry,
+    _ema,
+)
+
+
+def _sample(step: int, *, dur: float = 1.0, prefill: int = 0,
+            decode: int = 2, local: float = 100.0, remote: float = 50.0,
+            links: tuple[float, ...] | None = None,
+            health: str = "healthy", queue: int = 0) -> StepSample:
+    return StepSample(step=step, duration_s=dur, prefill_tokens=prefill,
+                      decode_tokens=decode, queue_depth=queue,
+                      active_slots=2, mean_kv_len=8.0, local_bytes=local,
+                      remote_bytes=remote, window=4,
+                      remote_bytes_per_link=links, health=health)
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+def test_ring_wraps_at_capacity_but_totals_keep_counting():
+    tel = Telemetry(capacity=4)
+    for i in range(10):
+        tel.record(_sample(i, decode=2))
+    assert len(tel.ring) == 4
+    assert [s.step for s in tel.ring] == [6, 7, 8, 9]
+    # Totals are cumulative over every sample, not just the ring window.
+    assert tel.total_steps == 10
+    assert tel.total_decode_tokens == 20
+
+
+def test_ring_capacity_must_be_positive():
+    with pytest.raises(ValueError):
+        Telemetry(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# EMA warm-up
+# ---------------------------------------------------------------------------
+def test_ema_warmup_adopts_first_value_exactly():
+    assert _ema(None, 42.0, 0.25) == 42.0
+    assert _ema(42.0, 0.0, 0.25) == pytest.approx(31.5)
+
+
+def test_first_sample_sets_achieved_bw_without_bias():
+    """Before the warm-up fix an implicit 0.0 seed would drag the first
+    EMA toward zero; the first sample must land exactly."""
+    tel = Telemetry(ema_alpha=0.25)
+    tel.record(_sample(0, dur=2.0, local=200.0, remote=100.0))
+    assert tel.achieved_local_bw == pytest.approx(100.0)
+    assert tel.achieved_remote_bw == pytest.approx(50.0)
+    # Second sample blends: 0.25 * new + 0.75 * prev.
+    tel.record(_sample(1, dur=1.0, local=400.0, remote=100.0))
+    assert tel.achieved_local_bw == pytest.approx(0.25 * 400.0 + 0.75 * 100.0)
+
+
+def test_aggregates_are_zero_before_any_sample():
+    tel = Telemetry()
+    assert tel.achieved_local_bw == 0.0
+    assert tel.queue_depth == 0.0
+    assert tel.prefill_fraction == 0.0
+    assert tel.achieved_link_bw == []
+
+
+# ---------------------------------------------------------------------------
+# Per-link resolution
+# ---------------------------------------------------------------------------
+def test_link_bytes_single_link_fallback():
+    s = _sample(0, remote=8.0, links=None)
+    assert s.link_bytes == (8.0,)
+    s = _sample(0, remote=8.0, links=(5.0, 3.0))
+    assert s.link_bytes == (5.0, 3.0)
+
+
+def test_link_ema_grows_when_mesh_samples_arrive():
+    """A late-arriving per-link breakdown widens the EMA vector; the new
+    link warm-starts from its first observation instead of a zero seed."""
+    tel = Telemetry(ema_alpha=0.5)
+    tel.record(_sample(0, dur=1.0, remote=10.0))           # single link
+    assert tel.achieved_link_bw == [pytest.approx(10.0)]
+    tel.record(_sample(1, dur=1.0, remote=10.0, links=(6.0, 4.0)))
+    bw = tel.achieved_link_bw
+    assert len(bw) == 2
+    assert bw[0] == pytest.approx(0.5 * 6.0 + 0.5 * 10.0)
+    assert bw[1] == pytest.approx(4.0)                     # warm-up, no bias
+
+
+def test_prefill_fraction_of_empty_step_is_zero():
+    assert _sample(0, prefill=0, decode=0).prefill_fraction == 0.0
+    assert _sample(0, prefill=3, decode=1).prefill_fraction == 0.75
+
+
+def test_degraded_steps_count_unhealthy_samples():
+    tel = Telemetry()
+    tel.record(_sample(0, health="healthy"))
+    tel.record(_sample(1, health="spilling"))
+    tel.record(_sample(2, health="recovering"))
+    assert tel.degraded_steps == 2
+
+
+def test_register_metrics_reproduces_report_block():
+    """The registry JSON view must be byte-identical to report() — the
+    BENCH telemetry block has a frozen schema."""
+    tel = Telemetry(predicted_local_bw=1e9, predicted_remote_bw=1e8)
+    for i in range(5):
+        tel.record(_sample(i, prefill=i, queue=i, health="spilling"))
+    reg = MetricsRegistry()
+    tel.register_metrics(reg)
+    assert reg.nested()["telemetry"] == tel.report()
+    assert list(reg.nested()["telemetry"]) == list(tel.report())
+
+
+# ---------------------------------------------------------------------------
+# Page-touch histogram
+# ---------------------------------------------------------------------------
+def test_histogram_decay_preserves_hot_cold_ordering():
+    h = PageTouchHistogram(decay=0.5)
+    for _ in range(3):
+        h.touch(0, 1)
+    h.touch(0, 2)
+    for _ in range(4):
+        h.advance()
+    assert h.heat(0, 1) == pytest.approx(3 * 0.5 ** 4)
+    assert h.heat(0, 1) > h.heat(0, 2)
+    assert h.coldest(0, [1, 2]) == 2
+    assert h.hottest(0, [1, 2]) == 1
+
+
+def test_histogram_stamp_breaks_equal_heat_ties():
+    """Equal heat → least-recently-touched spills first (the old
+    allocation-stamp behaviour)."""
+    h = PageTouchHistogram()
+    h.touch(0, 7)       # older stamp
+    h.touch(0, 3)       # newer stamp
+    assert h.coldest(0, [3, 7]) == 7
+    assert h.hottest(0, [3, 7]) == 3
+
+
+def test_histogram_decay_one_is_noop():
+    h = PageTouchHistogram(decay=1.0)
+    h.touch(0, 1, weight=2.0)
+    h.advance()
+    assert h.heat(0, 1) == 2.0
+
+
+def test_histogram_touch_order_is_decay_invariant():
+    """advance() multiplies every page uniformly, so relative order set
+    by touches never flips from decay alone."""
+    h = PageTouchHistogram(decay=0.9)
+    h.touch(0, 1)
+    h.advance()
+    h.touch(0, 2)       # fresher *and* hotter after 1's decay
+    assert h.hottest(0, [1, 2]) == 2
+    h.advance()
+    h.advance()
+    assert h.hottest(0, [1, 2]) == 2
+
+
+def test_histogram_retag_moves_heat_and_stamp():
+    h = PageTouchHistogram()
+    h.touch(0, 1, weight=3.0)
+    temp = h.temperature(0, 1)
+    h.retag(0, 1, 1, 5)
+    assert h.heat(0, 1) == 0.0
+    assert h.heat(1, 5) == 3.0
+    assert h.temperature(1, 5) == temp
+
+
+def test_histogram_forget_clears_history():
+    h = PageTouchHistogram()
+    h.touch(0, 1)
+    h.forget(0, 1)
+    assert h.heat(0, 1) == 0.0
+    assert h.temperature(0, 1) == (0.0, 0)
+
+
+def test_histogram_index_tiebreak_is_deterministic():
+    h = PageTouchHistogram()
+    # Untouched pages: identical temperature — index decides, stably.
+    assert h.coldest(0, [4, 2, 9]) == 2
+    assert h.hottest(0, [4, 2, 9]) == 2
+
+
+def test_histogram_rejects_bad_decay_and_empty_candidates():
+    with pytest.raises(ValueError):
+        PageTouchHistogram(decay=0.0)
+    with pytest.raises(ValueError):
+        PageTouchHistogram(decay=1.5)
+    with pytest.raises(ValueError):
+        PageTouchHistogram().coldest(0, [])
