@@ -4,6 +4,13 @@ Interpret-mode wall time on CPU is NOT TPU performance — these rows exist to
 (a) prove the kernels execute with the production tiling parameters and (b)
 report the analytically-derived TPU-side latency for the same shapes
 (`derived` column = modeled TPU µs from the EB model).
+
+``python -m benchmarks.kernel_micro --autotune [--autotune-cache PATH]``
+runs the same shapes through the shape-keyed autotuner
+(`repro.kernels.autotune`): each wrapper dispatches with the tuner's
+lint-validated winner instead of the module-default blocks, and the table
+can be persisted/reloaded so a checked-in cache reproduces the winners
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -29,14 +36,15 @@ def _time(f, *args, reps=3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def rows() -> list[Row]:
+def rows(tuner=None) -> list[Row]:
     out: list[Row] = []
     key = jax.random.PRNGKey(0)
     for (m, k, n, ratio) in [(128, 512, 512, 0.25), (256, 512, 1024, 0.5)]:
         x = jax.random.normal(key, (m, k), jnp.float32)
         w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
         tw = tiering.partition(w, ratio, axis=1, align=128)
-        wall = _time(lambda a, b: ops.tiered_matmul(a, b, window=2), x, tw)
+        wall = _time(lambda a, b: ops.tiered_matmul(a, b, window=2,
+                                                    tuner=tuner), x, tw)
         op = OpProfile("g", bytes=float(k * n * 4), flops=2.0 * m * k * n)
         modeled = op.latency(ratio, TPU_V5E)
         out.append((f"kernel.splitk_gemm.m{m}k{k}n{n}.r{int(ratio*100)}",
@@ -47,9 +55,68 @@ def rows() -> list[Row]:
     vv = jax.random.normal(jax.random.PRNGKey(3), (b, s, kh, hd), jnp.float32)
     kv = {"k_local": kk[:2], "v_local": vv[:2], "k_remote": kk[2:], "v_remote": vv[2:]}
     wall = _time(lambda a: ops.tiered_decode_attention(a, kv, kv_len=s,
-                                                       block_s=128, window=2), q)
+                                                       block_s=128, window=2,
+                                                       tuner=tuner), q)
     op = OpProfile("a", bytes=float(b * s * kh * hd * 2 * 4),
                    flops=4.0 * b * s * h * hd)
     out.append((f"kernel.splitk_flashattn.b{b}s{s}", wall * 1e6,
                 op.latency(0.5, TPU_V5E) * 1e6))
+    # flash_prefill: causal self-attention over one chunked-prefill tile.
+    tq = 256
+    qp = jax.random.normal(key, (1, h, tq, hd), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(4), (1, h, tq, hd), jnp.float32)
+    vp = jax.random.normal(jax.random.PRNGKey(5), (1, h, tq, hd), jnp.float32)
+    bq = bk = tq
+    if tuner is not None:
+        tuned = tuner.best_prefill(hd, tq, tq)
+        if tuned is not None:
+            bq, bk = tuned["block_q"], tuned["block_k"]
+    from repro.kernels import flash_prefill
+    wall = _time(lambda a, b_, c: flash_prefill(
+        a, b_, c, causal=True, block_q=min(bq, tq), block_k=min(bk, tq),
+        interpret=True), qp, kp, vp)
+    op = OpProfile("p", bytes=float(3 * tq * h * hd * 4),
+                   flops=4.0 * tq * tq * h * hd)
+    out.append((f"kernel.flash_prefill.t{tq}", wall * 1e6,
+                op.latency(0.0, TPU_V5E) * 1e6))
     return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune", action="store_true",
+                    help="dispatch with autotuned tile shapes (sweeps and "
+                         "caches winners per shape)")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="JSON autotune table: loaded if it exists, "
+                         "rewritten after the run with --autotune")
+    args = ap.parse_args(argv)
+    tuner = None
+    if args.autotune or args.autotune_cache:
+        from repro.kernels.autotune import Autotuner
+        if args.autotune_cache and os.path.exists(args.autotune_cache):
+            tuner = Autotuner.load(args.autotune_cache, sweep=args.autotune)
+        else:
+            tuner = Autotuner(sweep=args.autotune)
+    for name, wall_us, modeled_us in rows(tuner):
+        print(f"{name},{wall_us:.1f},{modeled_us:.3f}")
+    if tuner is not None:
+        print(f"# autotune: {tuner.counters()}")
+        findings = tuner.validate()
+        if findings:
+            for f in findings:
+                print(f"# LINT {f.rule} {f.site}: {f.msg}")
+            return 1
+        if args.autotune and args.autotune_cache:
+            tuner.save(args.autotune_cache)
+            print(f"# wrote {args.autotune_cache} ({len(tuner.table)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

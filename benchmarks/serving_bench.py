@@ -177,8 +177,23 @@ def collect() -> tuple[list[Row], dict]:
                      naive / per_link if per_link else 0.0))
     scenarios = _scenario_reports()
     rows.extend(_scenario_rows(scenarios))
+    # Eager-vs-jitted decode: the same smoke_50 SLO replay with the decode
+    # step eager (per-layer functional pool copies, priced by the modeled
+    # clock) vs compiled with pool donation (zero copy traffic).  Tokens
+    # are bitwise-identical (CI perf-smoke diffs them); the throughput
+    # ratio is the BENCH figure for what donation buys.
+    jit_rep = baseline_report()
+    eager_rep = eager_report()
+    jit_tps = jit_rep["modeled"]["tokens_per_modeled_s"]
+    eager_tps = eager_rep["modeled"]["tokens_per_modeled_s"]
+    rows.append(("serving_jit_modeled_tokens_per_s", 0.0, jit_tps))
+    rows.append(("serving_eager_modeled_tokens_per_s", 0.0, eager_tps))
+    rows.append(("serving_jit_vs_eager_gain", 0.0,
+                 jit_tps / eager_tps if eager_tps else 0.0))
     report = {"static": static, "adaptive": adaptive, "chaos": chaos,
-              "scenarios": scenarios}
+              "scenarios": scenarios,
+              "jit": {"jit": jit_rep, "eager": eager_rep,
+                      "gain": jit_tps / eager_tps if eager_tps else 0.0}}
     if sharded is not None:
         report["sharded"] = sharded
     return rows, report
@@ -195,6 +210,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_TRACE = os.path.join("benchmarks", "traces", "smoke_50.json")
 BASELINE_PATH = os.path.join("benchmarks", "baselines",
                              "serving_smoke_slo.json")
+EAGER_BASELINE_PATH = os.path.join("benchmarks", "baselines",
+                                   "serving_smoke_eager.json")
 
 
 def baseline_report() -> dict:
@@ -211,27 +228,50 @@ def baseline_report() -> dict:
         "--bench-json", ""])
 
 
+def eager_report() -> dict:
+    """The same smoke_50 SLO replay with ``--no-jit``: the eager decode
+    step, whose per-layer functional pool copies the modeled clock prices
+    as HBM copy traffic.  This is the checked-in baseline the CI
+    perf-smoke job compares the jitted replay against (``compare.py
+    --preset jit``: exact tokens, throughput strictly >=)."""
+    from repro.launch.serve import main as serve_main
+
+    return serve_main(TRACE_ARGS + [
+        "--scheduler", "slo", "--no-jit",
+        "--trace", os.path.join(ROOT, BASELINE_TRACE),
+        "--bench-json", ""])
+
+
 def main(argv: list[str] | None = None) -> int:
     """``python -m benchmarks.serving_bench --baseline-out PATH`` writes
     the regression-gate report (refresh the checked-in baseline with
     ``--baseline-out benchmarks/baselines/serving_smoke_slo.json`` after
-    an *intended* perf change; CI diffs fresh output against it)."""
+    an *intended* perf change; CI diffs fresh output against it).
+    ``--eager-baseline-out PATH`` writes the eager (``--no-jit``) twin the
+    perf-smoke job uses as the jit-gate baseline."""
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-out", default=None, metavar="PATH",
                     help=f"write the smoke_50 SLO replay report here "
                          f"(checked-in baseline: {BASELINE_PATH})")
+    ap.add_argument("--eager-baseline-out", default=None, metavar="PATH",
+                    help=f"write the eager (--no-jit) smoke_50 SLO replay "
+                         f"here (checked-in baseline: {EAGER_BASELINE_PATH})")
     args = ap.parse_args(argv)
-    if args.baseline_out:
-        rep = baseline_report()
-        # The trace path is machine-local; pin the repo-relative name so
-        # the checked-in baseline is byte-stable across checkouts.
-        rep["trace"] = BASELINE_TRACE
-        with open(args.baseline_out, "w") as fh:
-            json.dump(rep, fh, indent=2, default=float)
-            fh.write("\n")
-        print(f"wrote {args.baseline_out}")
+    if args.baseline_out or args.eager_baseline_out:
+        for path, make in ((args.baseline_out, baseline_report),
+                           (args.eager_baseline_out, eager_report)):
+            if not path:
+                continue
+            rep = make()
+            # The trace path is machine-local; pin the repo-relative name
+            # so the checked-in baseline is byte-stable across checkouts.
+            rep["trace"] = BASELINE_TRACE
+            with open(path, "w") as fh:
+                json.dump(rep, fh, indent=2, default=float)
+                fh.write("\n")
+            print(f"wrote {path}")
         return 0
     for name, _, value in rows():
         print(f"{name},{value}")

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import math
+from typing import Any
 
 import numpy as np
 
@@ -218,6 +219,87 @@ def check_paged_slot_order(tier: np.ndarray, lens: np.ndarray,
                                    where=f"{where}.paged_slot_order")
 
 
+def _dtype_name(dtype_bytes: int) -> str:
+    return {2: "bfloat16", 4: "float32", 8: "float64"}.get(dtype_bytes,
+                                                           "float32")
+
+
+def check_autotune_table(
+        entries: list[dict[str, Any]], hw: HardwareSpec | None = None, *,
+        where: str = "autotune", default_window: int = 2) -> list[Finding]:
+    """DAK101-103 over a persisted autotune table (the JSON cache written
+    by `kernels.autotune.Autotuner.save`): rebuild each tuned winner's
+    launch descriptor from its (op, shape, config) entry and run the same
+    lints the verifier applies to the module defaults — so a hand-edited
+    or stale cache can never smuggle an over-VMEM or misaligned tile past
+    the static checks.
+
+    ``hw`` overrides the per-entry hardware profile (cross-check a table
+    against a different budget); by default each entry is linted against
+    the profile it was tuned for.  Entries with ``config: null`` are
+    negative-cache markers (no candidate survived the sweep) — nothing is
+    dispatched for them, so they are skipped.  ``default_window`` supplies
+    the in-flight window for ops whose config does not carry one (the
+    paged attention entries tune the window itself as ``slots``)."""
+    from repro.core.hardware import SYSTEMS
+
+    out: list[Finding] = []
+    for i, d in enumerate(entries):
+        op = d.get("op")
+        config = d.get("config")
+        if config is None:
+            continue
+        site = f"{where}.table[{i}:{op}]"
+        ehw = hw if hw is not None else SYSTEMS.get(str(d.get("hw")))
+        if ehw is None:
+            out.append(Finding("DAK102", site,
+                               f"unknown hardware profile {d.get('hw')!r}"))
+            continue
+        try:
+            shape = [int(s) for s in d["shape"]]
+            db = int(np.dtype(d.get("dtype", "float32")).itemsize)
+            if op == "splitk_gemm":
+                m, k, n_loc, n_rem = shape
+                bm, bn, bk = (int(config["block_m"]), int(config["block_n"]),
+                              int(config["block_k"]))
+                out.extend(check_gemm_launch(GemmLaunch(
+                    name=str(op), m=-(-m // bm) * bm, k=-(-k // bk) * bk,
+                    n_loc=n_loc, n_rem=n_rem, block_m=bm, block_n=bn,
+                    block_k=bk, window=default_window, dtype_bytes=db),
+                    ehw, where=site))
+            elif op == "splitk_flashattn":
+                h, kh, hd, s = shape
+                bs = int(config["block_s"])
+                if bs < 1 or s % bs:
+                    out.append(Finding(
+                        "DAK102", site,
+                        f"S={s} not a multiple of tuned block_s={bs}"))
+                    continue
+                out.extend(check_attn_launch(AttnLaunch(
+                    name=str(op), kind="batch", h=h, kh=kh, hd=hd, chunk=bs,
+                    n_chunks=s // bs, window=default_window, dtype_bytes=db),
+                    ehw, where=site))
+            elif op == "paged_splitk_flashattn":
+                h, kh, hd, page_size, max_pages = shape
+                out.extend(check_attn_launch(AttnLaunch(
+                    name=str(op), kind="paged", h=h, kh=kh, hd=hd,
+                    chunk=page_size, n_chunks=max_pages,
+                    window=int(config["slots"]), dtype_bytes=db),
+                    ehw, where=site))
+            elif op == "flash_prefill":
+                hd, tq, tk = shape
+                bq, bk = int(config["block_q"]), int(config["block_k"])
+                out.extend(check_prefill_launch(PrefillLaunch(
+                    name=str(op), hd=hd, tq=-(-tq // bq) * bq,
+                    tk=-(-tk // bk) * bk, block_q=bq, block_k=bk,
+                    dtype_bytes=db), ehw, where=site))
+            else:
+                out.append(Finding("DAK102", site, f"unknown op {op!r}"))
+        except (KeyError, ValueError, TypeError) as exc:
+            out.append(Finding("DAK102", site, f"malformed entry: {exc}"))
+    return out
+
+
 # --------------------------------------------------------------------------
 # Building launch descriptors from a plan + abstract operand shapes
 # --------------------------------------------------------------------------
@@ -258,16 +340,19 @@ def check_alignment_invariants(
 def describe_launches(
         cfg, plan: TieringPlan, shapes: dict[str, tuple[int, ...]], *,
         align: int, batch: int, max_len: int,
-        dtype_bytes: int = 4,
+        dtype_bytes: int = 4, tuner: Any = None,
 ) -> tuple[list[GemmLaunch], list[AttnLaunch], list[PrefillLaunch]]:
     """Replay the serving engine's kernel dispatch decisions statically:
     which registered operands reach ``splitk_gemm`` (block-aligned tiers on
     the last axis — everything else takes the per-tier oracle), plus the
-    decode-attention and prefill launches implied by the KV page plan."""
-    bm = splitk_gemm.DEFAULT_BLOCK_M
-    bn = splitk_gemm.DEFAULT_BLOCK_N
-    bk = splitk_gemm.DEFAULT_BLOCK_K
+    decode-attention and prefill launches implied by the KV page plan.
+
+    With a ``tuner`` (`kernels.autotune.Autotuner`) the descriptors carry
+    the *autotuned* block shapes — the exact geometry the engine would
+    dispatch with that tuner attached — so the DAK101-103 checks run over
+    tuned launches, not just the module defaults."""
     window = max(1, plan.window.n_inflight)
+    dt = _dtype_name(dtype_bytes)
     gemms: list[GemmLaunch] = []
     mesh_div = (plan.mesh.n_devices
                 if plan.mesh is not None and plan.mesh.n_devices > 1 else 1)
@@ -283,6 +368,14 @@ def describe_launches(
         k = shape[-2]
         align_eff = math.lcm(od.align if od.align is not None else align, mesh_div)
         n_loc, n_rem = tiering.split_sizes(dim, ratio, align_eff)
+        bm = splitk_gemm.DEFAULT_BLOCK_M
+        bn = splitk_gemm.DEFAULT_BLOCK_N
+        bk = splitk_gemm.DEFAULT_BLOCK_K
+        if tuner is not None and n_loc and n_rem:
+            tuned = tuner.best_gemm(batch, k, n_loc, n_rem, dt)
+            if tuned is not None:
+                bm, bn, bk = (tuned["block_m"], tuned["block_n"],
+                              tuned["block_k"])
         if n_rem == 0 or n_loc == 0 or n_loc % bn or n_rem % bn:
             continue  # oracle fallback (per-tier, direct-access-clean)
         gemms.append(GemmLaunch(
@@ -302,20 +395,36 @@ def describe_launches(
         else:
             kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
         max_pages = -(-max_len // kp.page_size)
+        paged_window = window
+        if tuner is not None:
+            tuned = tuner.best_paged(cfg.n_heads, kh, hd, kp.page_size,
+                                     max_pages, 0.5, dt)
+            if tuned is not None:
+                paged_window = max(1, min(window, tuned["slots"]))
         attns.append(AttnLaunch(
             name="paged_decode", kind="paged", h=cfg.n_heads, kh=kh, hd=hd,
-            chunk=kp.page_size, n_chunks=max_pages, window=window,
+            chunk=kp.page_size, n_chunks=max_pages, window=paged_window,
             dtype_bytes=dtype_bytes))
         bs = splitk_flashattn.DEFAULT_BLOCK_S
         s = -(-max_len // bs) * bs
+        if tuner is not None:
+            tuned = tuner.best_attn(cfg.n_heads, kh, hd, s, 0.5, dt)
+            if tuned is not None:
+                bs = tuned["block_s"]
         attns.append(AttnLaunch(
             name="batch_decode", kind="batch", h=cfg.n_heads, kh=kh, hd=hd,
             chunk=bs, n_chunks=s // bs, window=window,
             dtype_bytes=dtype_bytes))
         bq = flash_prefill.DEFAULT_BLOCK_Q
+        bkp = flash_prefill.DEFAULT_BLOCK_K
         t = -(-max_len // bq) * bq
+        if tuner is not None:
+            tuned = tuner.best_prefill(cfg.resolved_head_dim, t, t, dt)
+            if tuned is not None:
+                bq, bkp = tuned["block_q"], tuned["block_k"]
         prefills.append(PrefillLaunch(
             name="flash_prefill", hd=cfg.resolved_head_dim, tq=t, tk=t,
+            block_q=bq, block_k=bkp,
             dtype_bytes=dtype_bytes))
     return gemms, attns, prefills
 
@@ -323,11 +432,13 @@ def describe_launches(
 def check_kernels(cfg, plan: TieringPlan, hw: HardwareSpec,
                   shapes: dict[str, tuple[int, ...]], *,
                   align: int, batch: int = 4, max_len: int = 256,
-                  where: str = "kernel") -> list[Finding]:
-    """All kernel lints for one (cfg, plan) point of the matrix."""
+                  where: str = "kernel", tuner: Any = None) -> list[Finding]:
+    """All kernel lints for one (cfg, plan) point of the matrix.  With a
+    ``tuner`` the launch descriptors carry its autotuned block shapes."""
     out = check_alignment_invariants(plan, shapes, align=align, where=where)
     gemms, attns, prefills = describe_launches(
-        cfg, plan, shapes, align=align, batch=batch, max_len=max_len)
+        cfg, plan, shapes, align=align, batch=batch, max_len=max_len,
+        tuner=tuner)
     for g in gemms:
         out.extend(check_gemm_launch(g, hw, where=where))
     for a in attns:

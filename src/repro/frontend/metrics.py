@@ -79,6 +79,7 @@ def modeled_step_seconds(
     mean_kv_len: float = 0.0,
     kv_local_bytes: float = 0.0,
     kv_remote_bytes: float = 0.0,
+    hbm_copy_bytes: float = 0.0,
 ) -> float:
     """Analytical latency of one engine step (the modeled clock's tick).
 
@@ -89,6 +90,11 @@ def modeled_step_seconds(
     ``kv_remote_bytes`` (each tier streamed at its own bandwidth), so tier
     demotion — preemption, migration, spills — is visible to the clock;
     with both at zero the planner's attention ops price the KV instead.
+    ``hbm_copy_bytes`` prices functional-update copy traffic at HBM
+    bandwidth: the eager (un-jitted) decode step materializes a fresh copy
+    of each KV page pool per layer scatter, while the jitted step donates
+    the pools and writes in place (zero) — this term is what makes the
+    eager-vs-jitted throughput row a deterministic gateable figure.
     """
     from repro.core import engine as offload_engine
     from repro.core.ebmodel import WorkloadSpec, total_latency
@@ -104,6 +110,8 @@ def modeled_step_seconds(
         t += total_latency(ops, [op_ratios.get(op.name, 0.0) for op in ops], hw)
         t += kv_local_bytes / hw.hbm.bandwidth
         t += kv_remote_bytes / hw.host.bandwidth
+    if hbm_copy_bytes:
+        t += hbm_copy_bytes / hw.hbm.bandwidth
     if prefill_tokens:
         wl = WorkloadSpec(batch=1, seq_len=prefill_tokens, phase="prefill")
         ops = offload_engine.enumerate_ops(cfg, wl)

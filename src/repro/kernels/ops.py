@@ -63,13 +63,28 @@ def tiered_matmul(
     block_k: int = DEFAULT_BLOCK_K,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    tuner=None,
 ) -> jax.Array:
-    """y = x @ W with W column-partitioned across (HBM, host) tiers."""
+    """y = x @ W with W column-partitioned across (HBM, host) tiers.
+
+    ``tuner`` is an optional `kernels.autotune.Autotuner`: when it holds
+    (or sweeps) a lint-validated winner for this shape, the tuned blocks
+    replace the defaults.  Block resolution happens at trace time (shapes
+    are static under jit), so the tuner costs nothing per step."""
     window = max(1, int(window))
     wl, wr = (w.local, w.remote) if isinstance(w, TieredArray) else w
     lead = x.shape[:-1]
     k = x.shape[-1]
     n_loc, n_rem = wl.shape[1], wr.shape[1]
+    if tuner is not None and use_kernel and n_loc and n_rem:
+        m_total = 1
+        for d in lead:
+            m_total *= int(d)
+        tuned = tuner.best_gemm(m_total, k, n_loc, n_rem, str(x.dtype))
+        if tuned is not None:
+            block_m = tuned["block_m"]
+            block_n = tuned["block_n"]
+            block_k = tuned["block_k"]
     aligned = (n_loc % block_n == 0) and (n_rem % block_n == 0)
     # Degenerate tiers (fully local / fully remote operand) take the oracle:
     # the kernel grid assumes both partitions are non-empty.
@@ -97,11 +112,19 @@ def tiered_decode_attention(
     block_s: int = DEFAULT_BLOCK_S,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    tuner=None,
 ) -> jax.Array:
     window = max(1, int(window))
     kl, vl = kv["k_local"], kv["v_local"]
     kr, vr = kv["k_remote"], kv["v_remote"]
     s = kl.shape[1]
+    if tuner is not None and use_kernel and s:
+        b_total = kl.shape[0] + kr.shape[0]
+        rem_frac = kr.shape[0] / b_total if b_total else 0.0
+        tuned = tuner.best_attn(q.shape[1], kl.shape[2], kl.shape[3], s,
+                                rem_frac, str(q.dtype))
+        if tuned is not None:
+            block_s = tuned["block_s"]
     if not use_kernel or s % block_s or kr.shape[0] == 0 and kl.shape[0] == 0:
         return ref.splitk_flashattn_ref(q, kl, vl, kr, vr, kv_len)
     return splitk_flashattn(
@@ -120,13 +143,25 @@ def paged_decode_attention(
     scale: float | None = None,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    tuner=None,
 ) -> jax.Array:
     """Ragged paged tiered decode attention (per-slot kv lengths; each page
     fetched from the tier its page-table entry names).  ``scale`` overrides
-    the ``hd**-0.5`` softmax scale (MLA latent-width pages)."""
+    the ``hd**-0.5`` softmax scale (MLA latent-width pages).  A ``tuner``
+    caps the in-flight DMA slot count at its tuned stage depth (the page
+    size fixes the chunk shape; only the pipeline depth is tunable — and
+    it never changes results, only DMA pacing)."""
     window = max(1, int(window))
     kl, vl = pools["k_local"], pools["v_local"]
     kr, vr = pools["k_remote"], pools["v_remote"]
+    if tuner is not None and use_kernel:
+        n_pages = kl.shape[0] + kr.shape[0]
+        rem_frac = kr.shape[0] / n_pages if n_pages else 0.0
+        tuned = tuner.best_paged(q.shape[1], kl.shape[2], kl.shape[3],
+                                 kl.shape[1], table.shape[1], rem_frac,
+                                 str(q.dtype))
+        if tuned is not None:
+            window = max(1, min(window, tuned["slots"]))
     if not use_kernel:
         return ref.paged_flashattn_ref(q, kl, vl, kr, vr, table, tier, lens,
                                        scale=scale)

@@ -151,6 +151,25 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--flight-slo-breach-ms", type=float, default=None,
                     help="with --flight-dir: dump a bundle the first time "
                          "a request's TTFT exceeds this (engine-clock ms)")
+    ap.add_argument("--no-jit", action="store_true",
+                    help="run the decode step eagerly (per-layer functional "
+                         "pool copies, per-step dispatch) instead of the "
+                         "compiled, pool-donating step — the baseline side "
+                         "of the eager-vs-jitted gate")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep kernel tile shapes per (op, shape, dtype, "
+                         "offload ratio, hw) under the EB cost model and "
+                         "dispatch with the lint-validated winners "
+                         "(kernels.autotune)")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="JSON autotune table: loaded before the run if it "
+                         "exists (winners reproduce bit-for-bit; without "
+                         "--autotune unseen shapes fall back to defaults), "
+                         "rewritten after the run with --autotune")
+    ap.add_argument("--tokens-out", default=None, metavar="PATH",
+                    help="write every request's emitted tokens as JSON "
+                         "{rid: [tokens]} — the parity artifact the CI "
+                         "perf-smoke job diffs between eager and jitted runs")
     ap.add_argument("--hbm-shrink", default=None, metavar="STEP:FRAC",
                     help="chaos event: at decode step STEP, shrink the "
                          "modeled HBM page budget to FRAC of the local pool "
@@ -208,6 +227,17 @@ def main(argv: list[str] | None = None) -> dict:
             args.flight_dir,
             slo_breach_s=(args.flight_slo_breach_ms / 1e3
                           if args.flight_slo_breach_ms is not None else None))
+    tuner = None
+    if args.autotune or args.autotune_cache:
+        import os
+
+        from repro.kernels.autotune import Autotuner
+        if args.autotune_cache and os.path.exists(args.autotune_cache):
+            tuner = Autotuner.load(args.autotune_cache, sweep=args.autotune)
+            print(f"autotune: loaded {len(tuner.table)} entries "
+                  f"from {args.autotune_cache} (hw={tuner.hw.name})")
+        else:
+            tuner = Autotuner(sweep=args.autotune)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
@@ -217,7 +247,8 @@ def main(argv: list[str] | None = None) -> dict:
         scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
         clock=ModeledClock() if trace is not None else None,
         check_invariants=args.check_invariants,
-        recorder=recorder, flight=flight)
+        recorder=recorder, flight=flight,
+        jit_step=not args.no_jit, tuner=tuner)
     if shrink is not None:
         engine.schedule_hbm_shrink(*shrink)
         print(f"chaos: HBM shrink to {shrink[1]:.0%} of the local pool "
@@ -226,7 +257,8 @@ def main(argv: list[str] | None = None) -> dict:
     print(f"plan: global={engine.plan.global_ratio:.2f} "
           f"per-op={ {k: round(v, 2) for k, v in engine.plan.op_ratios.items()} } "
           f"window={engine.plan.window.n_inflight} tiered={engine.tiered} "
-          f"adaptive={args.adaptive} mesh={engine.mesh_shape}")
+          f"jit={engine._jit} adaptive={args.adaptive} "
+          f"mesh={engine.mesh_shape}")
     if engine.plan.mesh is not None:
         mp = engine.plan.mesh
         print(f"mesh: {mp.n_devices} host links x "
@@ -240,18 +272,22 @@ def main(argv: list[str] | None = None) -> dict:
 
     rng = np.random.default_rng(0)
     t0 = time.time()
+    submitted: list[Request] = []
     if trace is not None:
         print(f"trace: {trace.description or args.trace} "
               f"({len(trace.entries)} requests) | scheduler {args.scheduler} "
               f"chunk {engine.scheduler.chunk_tokens}")
         for req in trace.to_requests(cfg.vocab):
+            submitted.append(req)
             engine.submit(req)
     else:
         for rid in range(args.requests):
-            engine.submit(Request(
+            req = Request(
                 rid=rid,
                 prompt=rng.integers(3, cfg.vocab, args.prompt_len).astype(np.int32),
-                max_new_tokens=args.new_tokens))
+                max_new_tokens=args.new_tokens)
+            submitted.append(req)
+            engine.submit(req)
     stats = engine.run()
     wall = time.time() - t0
     print(f"served {stats.served} requests in {wall:.2f}s | "
@@ -309,6 +345,17 @@ def main(argv: list[str] | None = None) -> dict:
         with open(args.metrics_out, "w") as fh:
             fh.write(reg.to_prometheus())
         print(f"wrote {args.metrics_out}")
+    if args.tokens_out:
+        with open(args.tokens_out, "w") as fh:
+            json.dump({str(r.rid): list(r.out_tokens) for r in submitted},
+                      fh, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.tokens_out}")
+    if tuner is not None:
+        print(f"autotune: {tuner.counters()}")
+        if args.autotune and args.autotune_cache:
+            tuner.save(args.autotune_cache)
+            print(f"wrote {args.autotune_cache} ({len(tuner.table)} entries)")
     if flight is not None and flight.dumped:
         print(f"flight bundles: {', '.join(flight.dumped)}")
     return report

@@ -287,6 +287,21 @@ def serving_registry(engine, stats, wall: float, *,
         reg.const("mesh_traffic", engine.mesh_traffic_report())
     if engine.runtime is not None:
         engine.runtime.register_metrics(reg, prefix="runtime")
+    # Compiled decode step: bucket compilations vs cache hits (a recompile
+    # storm shows as count ~ steps; healthy steady state is count = #buckets
+    # with every step a hit), plus the autotuner's sweep/hit counters.
+    reg.const("compile.jit", bool(getattr(engine, "_jit", False)),
+              "decode step runs as one jitted, pool-donating call")
+    reg.counter("compile.count",
+                "fresh decode-step compilations (one per (kind, "
+                "window-bucket, pool-shape) bucket)").set_total(
+        int(getattr(engine, "compile_count", 0)))
+    reg.counter("compile.cache_hits",
+                "decode steps served by an already-compiled bucket"
+                ).set_total(int(getattr(engine, "compile_cache_hits", 0)))
+    if getattr(engine, "tuner", None) is not None:
+        reg.const("autotune", engine.tuner.counters(),
+                  "autotuner table size + hit/miss/sweep counters")
     # Prometheus-only extras: latency distributions + scheduler queue flow
     # (in_json=False so the JSON schema stays frozen).
     reg.histogram("ttft_seconds", "time to first token").extend(stats.ttfts)
@@ -312,6 +327,7 @@ def provenance(engine, *, arch: str, extra: dict[str, Any] | None = None
         "clock": engine.clock.kind,
         "scheduler": engine.scheduler.name,
         "mesh_shape": engine.mesh_shape,
+        "jit": bool(getattr(engine, "_jit", False)),
         "jax": jax.__version__,
         **(extra or {}),
     }

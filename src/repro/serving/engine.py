@@ -280,6 +280,8 @@ class ServingEngine:
         check_invariants: bool = False,
         recorder: TraceRecorder | None = None,
         flight=None,
+        jit_step: bool = True,
+        tuner: Any = None,
     ):
         """``scheduler`` selects the serving frontend policy — a name
         ('fcfs' | 'priority' | 'slo'), a `frontend.scheduler.Scheduler`
@@ -371,6 +373,17 @@ class ServingEngine:
         self._prefill_calls_step = 0       # prefill passes in the last _admit
         self._preempt_moved_step = 0       # preemption demotions this step
         self._step_params: dict[str, Any] | None = None  # per-step fetch cache
+        # Compiled decode step: one jax.jit per (kind, window-bucket,
+        # pool-shape) bucket, with the K/V page pools (and recurrent state)
+        # donated so per-layer scatters write in place instead of
+        # materializing a functional copy of each pool per layer.  The
+        # non-tiered reference path stays eager (it is the oracle the
+        # tiered path is checked against).
+        self.tuner = tuner
+        self._jit = bool(jit_step) and self.use_kernels
+        self._compiled: dict[tuple, Any] = {}
+        self.compile_count = 0             # fresh jit compilations (buckets)
+        self.compile_cache_hits = 0        # steps served by a cached bucket
         # Elastic degradation: the engine always owns a health monitor
         # (runtime attached or not) — with no pressure it never leaves
         # `healthy` and every counter stays zero.
@@ -834,7 +847,21 @@ class ServingEngine:
             self.cfg, self.hw, self.plan.op_ratios,
             decode_slots=n_active,
             mean_kv_len=float(self.lens[active].mean()),
-            kv_local_bytes=kv_local, kv_remote_bytes=kv_remote))
+            kv_local_bytes=kv_local, kv_remote_bytes=kv_remote,
+            hbm_copy_bytes=self._decode_copy_bytes()))
+
+    def _decode_copy_bytes(self) -> float:
+        """Functional-update copy traffic of one eager decode step: without
+        donation, every per-layer K/V scatter materializes a fresh copy of
+        each page pool (`tiered_decode._paged_writer`), so the eager step
+        moves `n_layers * pool_bytes` of pure copy through HBM.  The jitted
+        step donates the pools and writes in place — zero.  This is the
+        term the eager-vs-jitted throughput gate measures."""
+        if self._jit or self.pcache is None:
+            return 0.0
+        pools = self.pcache.pools
+        n_layers = pools["k_local"].shape[0]
+        return float(n_layers) * float(sum(p.nbytes for p in pools.values()))
 
     def _fetched_params(self) -> dict[str, Any]:
         """The step's fetch-once broadcast of the sharded host partitions
@@ -893,6 +920,87 @@ class ServingEngine:
         self.stats.spills = self.pcache.spills
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _bucket_window(w: int) -> int:
+        """Round the AIMD window up to the next power of two.  The compiled
+        step closes over the window (a static kernel parameter), so
+        bucketing keeps the number of distinct compilations at O(log W)
+        while the controller sweeps — safe because outputs are
+        bitwise-independent of the window (it only paces DMA issue)."""
+        return 1 << max(0, int(w) - 1).bit_length()
+
+    def _compiled_step(self, kind: str):
+        """The jitted decode step for the current (kind, window-bucket,
+        pool-shape) bucket — compiled on first call, cached after.
+
+        The K/V page pools (and the hybrid/SSM recurrent state) are
+        *donated*: XLA reuses their buffers for the outputs, so the
+        per-layer scatters in `tiered_decode._paged_writer` lower to
+        in-place dynamic-update-slices instead of materializing a
+        functional copy of each pool per layer.  The engine's
+        `compute_pools → step → commit_pools` contract makes this safe:
+        nothing reads the donated arrays between the call and the commit
+        that replaces them.  Params are passed raw so the fetch-once
+        broadcast (`fetch_remote_shards`) traces inside the compiled step
+        (identity off-mesh; one in-jit all-gather per operand under a
+        mesh).  The argmax head also lives inside the jit, so only [B]
+        int32 tokens ever cross back to the host.
+
+        Pool growth (`grow_remote`) and sink moves change pool shapes, so
+        they key the cache alongside the window bucket — a changed key is
+        a fresh compile, counted and visible as a `compile` span.
+
+        Returns ``(fn, bucket)`` — ``bucket`` is a label on a fresh
+        compile, None on a cache hit."""
+        wb = self._bucket_window(self.window)
+        if self.pcache is not None:
+            sl, sr = self.pcache.sink_local, self.pcache.sink_remote
+            key = (kind, wb, sl, sr,
+                   self.pcache.pools["k_local"].shape,
+                   self.pcache.pools["k_remote"].shape)
+        else:
+            sl = sr = 0
+            key = (kind, wb)
+        fn = self._compiled.get(key)
+        if fn is not None:
+            self.compile_cache_hits += 1
+            return fn, None
+        self.compile_count += 1
+        cfg, mesh, axis = self.cfg, self.mesh, self.mesh_axis
+        tuner = self.tuner
+        if kind == "paged":
+            def run(params, pools, tokens, positions, attn_lens, table, tier,
+                    wr_tier, wr_idx, wr_off):
+                logits, pools = TD.paged_tiered_decode_step(
+                    cfg, params, pools, tokens, positions, attn_lens, table, tier,
+                    wr_tier, wr_idx, wr_off,
+                    sink_local=sl, sink_remote=sr, window=wb,
+                    use_kernel=True, mesh=mesh, mesh_axis=axis, tuner=tuner)
+                tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                return tok, pools
+            fn = jax.jit(run, donate_argnums=(1,))
+        elif kind == "hybrid":
+            def run(params, cache, pools, tokens, positions, attn_lens, table,
+                    tier, wr_tier, wr_idx, wr_off):
+                logits, cache, pools = TD.tiered_hybrid_decode_step(
+                    cfg, params, cache, pools, tokens, positions, attn_lens, table, tier,
+                    wr_tier, wr_idx, wr_off,
+                    sink_local=sl, sink_remote=sr, window=wb,
+                    use_kernel=True, mesh=mesh, mesh_axis=axis, tuner=tuner)
+                tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                return tok, cache, pools
+            fn = jax.jit(run, donate_argnums=(1, 2))
+        else:                              # pure-SSM recurrent state
+            def run(params, cache, tokens):
+                logits, cache = TD.tiered_ssm_decode_step(
+                    cfg, params, cache, tokens, window=wb, use_kernel=True, mesh=mesh,
+                    mesh_axis=axis, tuner=tuner)
+                tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                return tok, cache
+            fn = jax.jit(run, donate_argnums=(1,))
+        self._compiled[key] = fn
+        return fn, f"{kind}/w{wb}"
+
     def step(self) -> None:
         """One decode step for all active slots (ragged: each slot at its
         own position).  With the adaptive runtime attached, the in-flight
@@ -943,18 +1051,26 @@ class ServingEngine:
         positions = np.where(active, self.lens, 0).astype(np.int32)
         tc0 = self.clock.now() if self.recorder.enabled else 0.0
         t0 = time.time()
+        bucket = None                      # compile-span label on a fresh jit
         if not self.tiered:
             logits, self.cache = M.decode_step(
                 self.cfg, self.params, self.cache, tokens,
                 jnp.asarray(positions))
+            tok_dev = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
         elif self.pcache is None:
             # Pure-SSM decoder: recurrent tiered step, no KV pages.  The
-            # step reuses the admit-phase fetch (cached per step); the
-            # decode path's own fetch stage no-ops on the rebuilt tree.
-            logits, self.cache = TD.tiered_ssm_decode_step(
-                self.cfg, self._fetched_params(), self.cache, tokens,
-                window=self.window, use_kernel=True,
-                mesh=self.mesh, mesh_axis=self.mesh_axis)
+            # jitted path passes the raw params so the fetch-once broadcast
+            # traces *inside* the compiled step (identity off-mesh).
+            if self._jit:
+                fn, bucket = self._compiled_step("ssm")
+                tok_dev, self.cache = fn(self.params, self.cache, tokens)
+            else:
+                logits, self.cache = TD.tiered_ssm_decode_step(
+                    self.cfg, self._fetched_params(), self.cache, tokens,
+                    window=self.window, use_kernel=True,
+                    mesh=self.mesh, mesh_axis=self.mesh_axis,
+                    tuner=self.tuner)
+                tok_dev = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
         else:
             for slot in np.nonzero(active)[0]:
                 self._ensure_capacity_elastic(int(slot), int(self.lens[slot]) + 1)
@@ -966,32 +1082,52 @@ class ServingEngine:
                           table, tier, wr_tier, wr_idx, wr_off)
             pools_in = self.pcache.compute_pools()
             if self.cfg.family == "hybrid":
-                logits, self.cache, pools_out = TD.tiered_hybrid_decode_step(
-                    self.cfg, self._fetched_params(), self.cache, pools_in,
-                    *paged_args,
-                    sink_local=self.pcache.sink_local,
-                    sink_remote=self.pcache.sink_remote,
-                    window=self.window, use_kernel=True,
-                    mesh=self.mesh, mesh_axis=self.mesh_axis)
+                if self._jit:
+                    fn, bucket = self._compiled_step("hybrid")
+                    tok_dev, self.cache, pools_out = fn(
+                        self.params, self.cache, pools_in, *paged_args)
+                else:
+                    logits, self.cache, pools_out = TD.tiered_hybrid_decode_step(
+                        self.cfg, self._fetched_params(), self.cache, pools_in,
+                        *paged_args,
+                        sink_local=self.pcache.sink_local,
+                        sink_remote=self.pcache.sink_remote,
+                        window=self.window, use_kernel=True,
+                        mesh=self.mesh, mesh_axis=self.mesh_axis,
+                        tuner=self.tuner)
+                    tok_dev = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            elif self._jit:
+                fn, bucket = self._compiled_step("paged")
+                tok_dev, pools_out = fn(self.params, pools_in, *paged_args)
             else:
                 logits, pools_out = TD.paged_tiered_decode_step(
                     self.cfg, self._fetched_params(), pools_in, *paged_args,
                     sink_local=self.pcache.sink_local,
                     sink_remote=self.pcache.sink_remote,
                     window=self.window, use_kernel=True,
-                    mesh=self.mesh, mesh_axis=self.mesh_axis)
+                    mesh=self.mesh, mesh_axis=self.mesh_axis,
+                    tuner=self.tuner)
+                tok_dev = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
             self.pcache.commit_pools(pools_out)
-        logits.block_until_ready()
+        if self.clock.kind == "wall":
+            # Host sync only where wall-clock timing needs it; modeled-clock
+            # replays dispatch fully async (the [B] int32 token fetch below
+            # is the step's only device dependency).
+            jax.block_until_ready(tok_dev)
         self.stats.decode_time += time.time() - t0
         self.stats.decode_steps += 1
         self._clock_tick_decode(active)
         if self.recorder.enabled:
+            if bucket is not None:
+                self.recorder.span(ENGINE, 0, f"compile[{bucket}]", tc0,
+                                   self.clock.now(), cat="compile",
+                                   wall_ms=(time.time() - t0) * 1e3)
             self.recorder.span(ENGINE, 0, "decode", tc0, self.clock.now(),
                                cat="decode", slots=int(active.sum()),
                                step=self.stats.decode_steps)
         self._runtime_step(t_step_clock, prefill_tokens, active)
         self._finish_step_health()
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
+        nxt = np.asarray(tok_dev, dtype=np.int32)
         for slot, req in enumerate(self.active):
             if req is None:
                 continue

@@ -86,9 +86,11 @@ def partition_dense_params(
     return out
 
 
-def _mm(x: jax.Array, w: Any, window: int, use_kernel: bool) -> jax.Array:
+def _mm(x: jax.Array, w: Any, window: int, use_kernel: bool,
+        tuner: Any = None) -> jax.Array:
     if isinstance(w, TieredArray):
-        return ops.tiered_matmul(x, w, window=window, use_kernel=use_kernel)
+        return ops.tiered_matmul(x, w, window=window, use_kernel=use_kernel,
+                                 tuner=tuner)
     return x @ w
 
 
@@ -148,13 +150,14 @@ WriteAndAttend = Callable[..., jax.Array]
 def _gqa_attend(
     cfg: ModelConfig, lp: dict[str, Any], hn: jax.Array, positions: jax.Array,
     idx: int, window: int, use_kernel: bool, write_and_attend: WriteAndAttend,
+    tuner: Any = None,
 ) -> jax.Array:
     """GQA attention over the injected cache: returns [B,1,Hp*hd] (pre-wo)."""
     hd, hp = cfg.resolved_head_dim, cfg.padded_heads
     b = hn.shape[0]
 
     def kmm(a, w):
-        return _mm(a, w, window, use_kernel)
+        return _mm(a, w, window, use_kernel, tuner)
 
     q, k_new, v_new = L.qkv_project(cfg, hn, lp, mm=kmm)
     q, k_new = L._maybe_qk_norm(cfg, q, k_new, lp)
@@ -170,6 +173,7 @@ def _gqa_attend(
 def _mla_attend(
     cfg: ModelConfig, lp: dict[str, Any], hn: jax.Array, positions: jax.Array,
     idx: int, window: int, use_kernel: bool, write_and_attend: WriteAndAttend,
+    tuner: Any = None,
 ) -> jax.Array:
     """Absorbed-form MLA over latent-width pages: returns [B,1,H*vd] (pre-wo).
 
@@ -183,7 +187,7 @@ def _mla_attend(
     b = hn.shape[0]
 
     def kmm(a, w):
-        return _mm(a, w, window, use_kernel)
+        return _mm(a, w, window, use_kernel, tuner)
 
     q_nope, q_rope = L.mla_project_q(cfg, hn, lp, mm=kmm)         # [B,1,H,*]
     c_kv, k_rope = L.mla_project_kv_latent(cfg, hn, lp, mm=kmm)   # [B,1,*]
@@ -205,9 +209,9 @@ def _mla_attend(
 
 
 def _head(cfg: ModelConfig, params: dict[str, Any], x: jax.Array,
-          window: int, use_kernel: bool) -> jax.Array:
+          window: int, use_kernel: bool, tuner: Any = None) -> jax.Array:
     return M.lm_head(cfg, params, x,
-                     mm=lambda a, w: _mm(a, w, window, use_kernel))
+                     mm=lambda a, w: _mm(a, w, window, use_kernel, tuner))
 
 
 def _decode_transformer(
@@ -218,6 +222,7 @@ def _decode_transformer(
     window: int,
     use_kernel: bool,
     write_and_attend: WriteAndAttend,
+    tuner: Any = None,
 ) -> jax.Array:
     """Shared decode body for the attention-decoder families (dense, VLM,
     MoE, MLA): operand-type dispatch picks the attention flavor and FFN per
@@ -225,21 +230,21 @@ def _decode_transformer(
     x = params["embed"][tokens]                       # [B,1,d]
 
     def kmm(a, w):
-        return _mm(a, w, window, use_kernel)
+        return _mm(a, w, window, use_kernel, tuner)
 
     for i in range(cfg.n_layers):
         lp = layer_slice(params["layers"], i)
         hn = L.norm(cfg, x, lp, "ln1")
         attend = _mla_attend if cfg.use_mla else _gqa_attend
         attn = attend(cfg, lp, hn, positions, i, window, use_kernel,
-                      write_and_attend)
-        x = x + _mm(attn, lp["wo"], window, use_kernel)
+                      write_and_attend, tuner)
+        x = x + _mm(attn, lp["wo"], window, use_kernel, tuner)
         hn2 = L.norm(cfg, x, lp, "ln2")
         if cfg.family == "moe":
             x = x + L.moe_block(cfg, hn2, lp, mm=kmm)
         else:
             x = x + L.mlp_block(cfg, hn2, lp, mm=kmm)
-    return _head(cfg, params, x, window, use_kernel)
+    return _head(cfg, params, x, window, use_kernel, tuner)
 
 
 def tiered_decode_step(
@@ -291,6 +296,7 @@ def _paged_writer(
     table: jax.Array, tier: jax.Array, attn_lens: jax.Array,
     wr_tier: jax.Array, wr_idx: jax.Array, wr_off: jax.Array,
     sink_local: int, sink_remote: int, window: int, use_kernel: bool,
+    tuner: Any = None,
 ) -> WriteAndAttend:
     """write_and_attend over a paged tiered pool set (mutates `pools`).
 
@@ -317,7 +323,7 @@ def _paged_writer(
                        "v_remote": pools[f"{v_name}_remote"][i]}
         return ops.paged_decode_attention(
             q, layer_pools, table, tier, attn_lens,
-            window=window, scale=scale, use_kernel=use_kernel)
+            window=window, scale=scale, use_kernel=use_kernel, tuner=tuner)
 
     return write_and_attend
 
@@ -341,6 +347,7 @@ def paged_tiered_decode_step(
     use_kernel: bool = True,
     mesh: Any = None,
     mesh_axis: str | None = None,
+    tuner: Any = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One ragged decode step over tiered weights + paged tiered KV for the
     attention-decoder families (dense / VLM / MoE / MLA).
@@ -354,9 +361,10 @@ def paged_tiered_decode_step(
     pools = dict(pools)
     write_and_attend = _paged_writer(
         pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,
-        sink_local, sink_remote, window, use_kernel)
+        sink_local, sink_remote, window, use_kernel, tuner)
     logits = _decode_transformer(
-        cfg, params, tokens, positions, window, use_kernel, write_and_attend)
+        cfg, params, tokens, positions, window, use_kernel, write_and_attend,
+        tuner)
     return logits, pools
 
 
@@ -370,6 +378,7 @@ def tiered_ssm_decode_step(
     use_kernel: bool = True,
     mesh: Any = None,
     mesh_axis: str | None = None,
+    tuner: Any = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One recurrent decode step for pure-SSM decoders over tiered weights.
 
@@ -380,7 +389,7 @@ def tiered_ssm_decode_step(
     x = params["embed"][tokens]
 
     def kmm(a, w):
-        return _mm(a, w, window, use_kernel)
+        return _mm(a, w, window, use_kernel, tuner)
 
     convs, states = [], []
     for i in range(cfg.n_layers):
@@ -391,7 +400,7 @@ def tiered_ssm_decode_step(
         x = x + y
         convs.append(conv_i)
         states.append(state_i)
-    logits = _head(cfg, params, x, window, use_kernel)
+    logits = _head(cfg, params, x, window, use_kernel, tuner)
     return logits, {"conv": jnp.stack(convs), "state": jnp.stack(states)}
 
 
@@ -415,6 +424,7 @@ def tiered_hybrid_decode_step(
     use_kernel: bool = True,
     mesh: Any = None,
     mesh_axis: str | None = None,
+    tuner: Any = None,
 ) -> tuple[jax.Array, dict[str, jax.Array], dict[str, jax.Array]]:
     """One ragged decode step for Zamba2-style hybrids: each group runs its
     shared attention+MLP block (GQA over the group's paged tiered KV layer)
@@ -423,10 +433,10 @@ def tiered_hybrid_decode_step(
     pools = dict(pools)
     write_and_attend = _paged_writer(
         pools, table, tier, attn_lens, wr_tier, wr_idx, wr_off,
-        sink_local, sink_remote, window, use_kernel)
+        sink_local, sink_remote, window, use_kernel, tuner)
 
     def kmm(a, w):
-        return _mm(a, w, window, use_kernel)
+        return _mm(a, w, window, use_kernel, tuner)
 
     x = params["embed"][tokens]
     h0 = x
@@ -439,8 +449,8 @@ def tiered_hybrid_decode_step(
         z = jnp.concatenate([x, h0], axis=-1) @ sp["concat_proj"]
         zn = L.norm(cfg, z, sp, "ln1")
         attn = _gqa_attend(cfg, sp, zn, positions, g_idx, window, use_kernel,
-                           write_and_attend)
-        z = z + _mm(attn, sp["wo"], window, use_kernel)
+                           write_and_attend, tuner)
+        z = z + _mm(attn, sp["wo"], window, use_kernel, tuner)
         z = z + L.mlp_block(cfg, L.norm(cfg, z, sp, "ln2"), sp, mm=kmm)
         x = x + z
         for j in range(k_every):
@@ -452,7 +462,7 @@ def tiered_hybrid_decode_step(
             x = x + y
             convs.append(conv_i)
             states.append(state_i)
-    logits = _head(cfg, params, x, window, use_kernel)
+    logits = _head(cfg, params, x, window, use_kernel, tuner)
     return logits, {"conv": jnp.stack(convs), "state": jnp.stack(states)}, pools
 
 

@@ -156,6 +156,37 @@ def test_dak103_schedule_permutation_fires():
     assert KL.check_order_permutation(np.array([2, 3, 0, 1]), 4) == []
 
 
+def test_autotune_table_dak101_over_vmem_entry_fires():
+    """A hand-edited (or stale) autotune cache cannot smuggle an
+    over-VMEM tile past the verifier: the gemm x-block alone at
+    block_m=512 x k=131072 x f32 is ~268 MB — beyond every profile."""
+    entry = {"op": "splitk_gemm", "shape": [4, 131072, 2048, 2048],
+             "dtype": "float32", "ratio": 0.5, "hw": "tpu_v5e",
+             "config": {"block_m": 512, "block_n": 512, "block_k": 512},
+             "modeled_us": 1.0}
+    assert "DAK101" in _rules(KL.check_autotune_table([entry]))
+
+
+def test_autotune_table_dak102_bad_entries_fire():
+    base = {"shape": [8, 2, 64, 512], "dtype": "float32", "ratio": 0.5,
+            "hw": "tpu_v5e", "modeled_us": 1.0}
+    unknown_op = dict(base, op="fused_mystery_matmul",
+                      config={"block_s": 128})
+    unknown_hw = dict(base, op="splitk_flashattn", hw="tpu_v9000",
+                      config={"block_s": 128})
+    indivisible = dict(base, op="splitk_flashattn",
+                       config={"block_s": 100})
+    malformed = dict(base, op="splitk_gemm", shape=[2, 512],
+                     config={"block_m": 128})
+    fs = KL.check_autotune_table(
+        [unknown_op, unknown_hw, indivisible, malformed])
+    assert _rules(fs) == {"DAK102"} and len(fs) == 4
+    # config=None marks "no candidate survived": nothing dispatches, so
+    # the table check skips it.
+    assert KL.check_autotune_table([dict(base, op="splitk_gemm",
+                                         config=None)]) == []
+
+
 def test_kernel_lints_green_on_current_tree():
     cfg = C.get("llama2_7b")
     shapes = surface.operand_shapes(cfg)

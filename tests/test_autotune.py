@@ -1,0 +1,152 @@
+"""Shape-keyed kernel autotuner: determinism, persistence, lint guards.
+
+The sweep is pure arithmetic over the EB cost model, so the whole
+contract is reproducibility: same key -> same winner, in-process or
+through the JSON cache; winners never violate the DAK101-103 lints; and
+hardware profiles with different host links can pick different winners
+for the same operand (the reason the table is keyed by profile at all).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.hardware import GH200, TPU_V5E
+from repro.kernels.autotune import Autotuner, Entry
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+# A shape every sweep below reuses: (m, k, n_loc, n_rem) for the gemm,
+# (h, kh, hd, s) for batch attention, (h, kh, hd, page, max_pages) paged.
+GEMM = (2, 512, 1024, 1024)
+ATTN = (8, 2, 64, 512)
+PAGED = (8, 2, 64, 4, 16)
+
+
+def _winners(tuner):
+    return {
+        "gemm": tuner.best_gemm(*GEMM),
+        "attn": tuner.best_attn(*ATTN, 0.5),
+        "paged": tuner.best_paged(*PAGED, 0.5),
+        "prefill": tuner.best_prefill(64, 256, 256),
+    }
+
+
+def test_sweep_is_deterministic():
+    a, b = _winners(Autotuner()), _winners(Autotuner())
+    assert a == b
+    assert all(v is not None for v in a.values())
+
+
+def test_cache_hits_after_first_sweep():
+    tuner = Autotuner()
+    first = _winners(tuner)
+    assert tuner.counters()["sweeps"] == 4
+    again = _winners(tuner)
+    assert again == first
+    c = tuner.counters()
+    assert c == {"entries": 4, "hits": 4, "misses": 4, "sweeps": 4}
+
+
+def test_json_round_trip_reproduces_winners(tmp_path):
+    tuner = Autotuner()
+    swept = _winners(tuner)
+    path = str(tmp_path / "table.json")
+    tuner.save(path)
+
+    # Lookup-only reload: every query is a hit, nothing re-sweeps — this
+    # is the CI reproducibility mode (--autotune-cache without --autotune).
+    replay = Autotuner.load(path, sweep=False)
+    assert replay.hw is TPU_V5E          # hw inferred from the table
+    assert _winners(replay) == swept
+    assert replay.counters()["sweeps"] == 0
+    assert replay.counters()["misses"] == 0
+
+    # Byte-stable persistence: re-saving the reloaded table is a no-op.
+    path2 = str(tmp_path / "table2.json")
+    replay.save(path2)
+    with open(path) as a, open(path2) as b:
+        assert a.read() == b.read()
+
+
+def test_lookup_only_miss_returns_none():
+    tuner = Autotuner(sweep=False)
+    assert tuner.best_gemm(*GEMM) is None
+    assert tuner.counters() == {"entries": 0, "hits": 0, "misses": 1,
+                                "sweeps": 0}
+
+
+def test_hw_profiles_can_disagree():
+    """The PCIe-class v5e host link and the 450 GB/s GH200 link pick
+    different in-flight slot counts for the same paged-attention operand:
+    the slow link needs deeper issue-latency amortization than the GH200's
+    VMEM budget allows."""
+    shape = (32, 8, 128, 16, 128)
+    v5e = Autotuner(TPU_V5E).best_paged(*shape, 0.1)
+    gh = Autotuner(GH200).best_paged(*shape, 0.1)
+    assert v5e is not None and gh is not None
+    assert v5e["slots"] != gh["slots"]
+
+
+def test_swept_winners_pass_lints():
+    tuner = Autotuner()
+    _winners(tuner)
+    assert tuner.validate() == []
+    # Cross-checking the v5e-tuned table against the GH200's much smaller
+    # VMEM budget may flag entries — but never crash.
+    assert isinstance(tuner.validate(GH200), list)
+
+
+def test_unsweepable_shape_is_negative_cached():
+    tuner = Autotuner()
+    # No block candidate divides n_loc=96 -> no winner, cached as None.
+    assert tuner.best_gemm(2, 512, 96, 96) is None
+    assert tuner.counters()["entries"] == 1
+    assert tuner.best_gemm(2, 512, 96, 96) is None
+    assert tuner.counters()["hits"] == 1
+    assert tuner.validate() == []        # config=None entries are skipped
+
+
+def test_table_version_guard(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 999, "entries": []}\n')
+    with pytest.raises(ValueError, match="version"):
+        Autotuner.load(str(path))
+
+
+def test_entry_json_round_trip():
+    ent = Entry(op="splitk_gemm", shape=(2, 512, 1024, 1024),
+                dtype="float32", ratio=0.5, hw="tpu_v5e",
+                config={"block_m": 128, "block_n": 256, "block_k": 128},
+                modeled_us=12.5)
+    assert Entry.from_json(ent.to_json()) == ent
+
+
+# -- end to end: the tuner preserves token parity through the engine -------
+def test_tuned_engine_matches_eager_tokens():
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, cfg.vocab, 5).astype(np.int32)
+               for _ in range(2)]
+
+    def serve(jit_step, tuner):
+        eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                            global_offload_ratio=0.5, jit_step=jit_step,
+                            tuner=tuner)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=3)
+                for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [list(r.out_tokens) for r in reqs]
+
+    tuner = Autotuner()
+    # Eager and jitted share the tuner, so both dispatch the same tuned
+    # tile shapes -> bitwise-identical tokens per table.
+    assert serve(False, tuner) == serve(True, tuner)
+    assert tuner.counters()["entries"] >= 1

@@ -1,0 +1,197 @@
+"""Compiled decode step: jit + pool donation parity and plumbing.
+
+The contract under test is the acceptance bar of the raw-speed decode
+change:
+
+* the jitted step (``jit_step=True``, the default) emits bitwise the same
+  tokens as the eager tiered path for every cache family — paged
+  attention, SSM, and hybrid — across offload ratios;
+* donation is real: after a decode-only jitted step the *previous* pool
+  buffers are deleted (donated to the in-place scatter), with no second
+  live copy — while the eager path leaves them alive;
+* the step compiles once per shape bucket and every further step is a
+  cache hit, surfaced through ``compile_count`` / ``compile_cache_hits``
+  and the metrics registry;
+* the engine only host-syncs (``jax.block_until_ready``) on the wall
+  clock — modeled-clock replays dispatch asynchronously.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.frontend.metrics import ModeledClock
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _serve(arch, ratio, *, jit_step, n_requests=3, max_new=4, clock=None):
+    cfg = C.get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                        global_offload_ratio=ratio, jit_step=jit_step,
+                        clock=clock)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab, 5).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n_requests)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, {r.rid: list(r.out_tokens) for r in reqs}
+
+
+# -- bitwise token parity, eager vs jitted ---------------------------------
+@pytest.mark.parametrize("arch,ratio", [
+    ("llama2_7b", 0.0),            # dense / paged attention, all-local
+    ("llama2_7b", 0.5),            # dense, split tiers
+    ("mamba2_370m", 0.5),          # SSM cache (no page pools)
+    ("zamba2_2p7b", 1.0),          # hybrid: ssm cache + attn pools, all-remote
+])
+def test_jit_matches_eager_tokens(arch, ratio):
+    eager_eng, eager = _serve(arch, ratio, jit_step=False)
+    jit_eng, jitted = _serve(arch, ratio, jit_step=True)
+    assert eager_eng._jit is False and jit_eng._jit is True
+    assert jitted == eager
+    assert all(toks for toks in jitted.values())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3_moe_30b_a3b", "deepseek_v2_236b"])
+def test_jit_matches_eager_tokens_moe_mla(arch):
+    _, eager = _serve(arch, 0.5, jit_step=False)
+    _, jitted = _serve(arch, 0.5, jit_step=True)
+    assert jitted == eager
+
+
+# -- donation: prior pool buffers are consumed by the compiled step --------
+def _pool_snapshots(jit_step):
+    """Run one request, snapshotting the K/V pools before every
+    decode-only step (no pending prefill, at least one active slot)."""
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                        global_offload_ratio=0.5, jit_step=jit_step)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(3, cfg.vocab, 5).astype(np.int32),
+                       max_new_tokens=4))
+    snaps = []
+    orig_step = eng.step
+
+    def spying_step():
+        if (eng.pcache is not None and not eng.prefilling
+                and not eng.scheduler.waiting
+                and any(r is not None for r in eng.active)):
+            snaps.append(dict(eng.pcache.pools))
+        orig_step()
+
+    eng.step = spying_step
+    eng.run()
+    return eng, snaps
+
+
+def test_jit_step_donates_pools():
+    eng, snaps = _pool_snapshots(jit_step=True)
+    assert eng._jit and snaps
+    for pools in snaps:
+        # Every prior buffer was donated into the compiled step's in-place
+        # scatter: no second live copy of any pool exists.
+        assert all(arr.is_deleted() for arr in pools.values())
+    # ... and the cache's *current* pools are alive and committed.
+    assert not any(arr.is_deleted() for arr in eng.pcache.pools.values())
+
+
+def test_eager_step_keeps_pools_alive():
+    eng, snaps = _pool_snapshots(jit_step=False)
+    assert not eng._jit and snaps
+    for pools in snaps:
+        assert not any(arr.is_deleted() for arr in pools.values())
+
+
+# -- compile caching: one compile per bucket, hits thereafter --------------
+def test_compile_once_per_bucket_then_cache_hits():
+    eng, _ = _serve("llama2_7b", 0.5, jit_step=True)
+    assert eng.compile_count >= 1
+    assert eng.compile_cache_hits >= 1
+    # Window bucketing keeps recompiles rare: a short smoke run must not
+    # compile more buckets than it has distinct (kind, window) shapes.
+    assert eng.compile_count <= 2
+    total = eng.compile_count + eng.compile_cache_hits
+    assert total == eng.stats.decode_steps
+
+
+def test_eager_engine_never_compiles():
+    eng, _ = _serve("llama2_7b", 0.5, jit_step=False)
+    assert eng.compile_count == 0 and eng.compile_cache_hits == 0
+
+
+def test_metrics_registry_reports_compile_counters():
+    from repro.obs.metrics import provenance, serving_registry
+
+    eng, _ = _serve("llama2_7b", 0.5, jit_step=True)
+    reg = serving_registry(eng, eng.stats, 0.1,
+                           meta={"arch": "llama2_7b", "smoke": True})
+    assert reg.value("compile.jit") is True
+    assert reg.value("compile.count") == eng.compile_count
+    assert reg.value("compile.cache_hits") == eng.compile_cache_hits
+    assert provenance(eng, arch="llama2_7b")["jit"] is True
+
+
+# -- host sync gated on the clock ------------------------------------------
+def _count_syncs(monkeypatch, clock):
+    calls = {"n": 0}
+    real = jax.block_until_ready
+
+    def spy(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", spy)
+    _serve("llama2_7b", 0.5, jit_step=True, clock=clock)
+    return calls["n"]
+
+
+def test_wall_clock_syncs_each_step(monkeypatch):
+    assert _count_syncs(monkeypatch, None) >= 1          # default WallClock
+
+
+def test_modeled_clock_never_syncs(monkeypatch):
+    assert _count_syncs(monkeypatch, ModeledClock()) == 0
+
+
+# -- mesh: compiled step with sharded remote pools -------------------------
+@pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+def test_jit_mesh_matches_single_device():
+    cfg = C.get_smoke("llama2_7b")
+    params = M.init_params(cfg, KEY)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("model",))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, cfg.vocab, 5).astype(np.int32)
+               for _ in range(2)]
+
+    def run(mesh_, jit_step):
+        eng = ServingEngine(cfg, params, max_batch=2, max_len=24,
+                            global_offload_ratio=0.5, mesh=mesh_,
+                            jit_step=jit_step)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=3)
+                for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng, [list(r.out_tokens) for r in reqs]
+
+    eng_m, toks_mesh = run(mesh, True)
+    _, toks_mesh_eager = run(mesh, False)
+    _, toks_single = run(None, True)
+    assert toks_mesh == toks_mesh_eager == toks_single
+    # The remote-pool sharding spec survives the donate -> commit round
+    # trip: pools stay mesh-sharded after jitted decode steps.
+    assert eng_m.pcache.remote_sharded
