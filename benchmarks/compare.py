@@ -64,6 +64,12 @@ GATES = (
     Gate("ttft_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
     Gate("queue_delay_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
     Gate("e2e_p95_ms", "lower", rel_tol=0.10, abs_tol=1e-3),
+    # Bandwidth attribution (runs served with --attribution): the modeled
+    # achieved/optimal aggregate-bandwidth fraction is deterministic on
+    # the modeled clock and must not regress.  The per-component
+    # attribution seconds and any wall-derived fields are informational
+    # only — never gated.
+    Gate("bottleneck.optimal_fraction.mean", "higher", rel_tol=0.05),
 )
 
 # The eager-vs-jitted gate (CI perf-smoke): baseline is the *eager* replay

@@ -1,14 +1,27 @@
-"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+"""Roofline tables: dry-run cells and live serving runs.
 
-Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun)
+Dry-run mode (the original §Roofline deliverable) reads
+``benchmarks/artifacts/dryrun/*.json`` (produced by `repro.launch.dryrun`)
 and emits per-cell rows: the three roofline terms, the dominant one, and
 MODEL_FLOPS/HLO_FLOPs.  `derived` column = roofline fraction
-(= t_compute / max(t_compute, t_memory, t_collective): how close the cell is
-to being compute-limited, the score the perf loop drives up).
+(= t_compute / max(t_compute, t_memory, t_collective): how close the cell
+is to being compute-limited, the score the perf loop drives up).
+
+Serving mode (``--serving BENCH_serving.json``) renders the same style of
+table from a live run's ``attribution.*`` / ``bottleneck.*`` blocks
+(`repro.obs.attribution`, runs served with ``--attribution``): per-
+component attributed seconds, the per-category utilization split, and the
+achieved-vs-optimal aggregate-bandwidth fraction — the serving analogue
+of the roofline fraction.
+
+``--strict`` makes missing inputs a hard error (non-zero exit with a
+clear message) instead of printing an empty table — the CI mode.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 from pathlib import Path
 
 ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
@@ -52,5 +65,97 @@ def table(mesh: str = "pod16x16") -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Serving roofline (rows from a live run's attribution blocks)
+# ---------------------------------------------------------------------------
+def serving_rows(report: dict) -> list[Row]:
+    """(name, seconds, share) rows from a BENCH report's attribution
+    block, plus the bottleneck utilization/optimality summary rows."""
+    attr = report.get("attribution")
+    btl = report.get("bottleneck")
+    if not isinstance(attr, dict) or not isinstance(btl, dict):
+        raise ValueError(
+            "report has no attribution/bottleneck blocks — serve with "
+            "--attribution")
+    secs = attr.get("seconds", {})
+    total = sum(v for k, v in secs.items() if k != "unattributed")
+    out: list[Row] = []
+    for comp, v in secs.items():
+        out.append((f"serving.attribution.{comp}", float(v),
+                    round(v / total, 4) if total else 0.0))
+    frac = btl.get("optimal_fraction", {})
+    out.append(("serving.bw.optimal_fraction.mean",
+                float(frac.get("mean", 0.0)), float(frac.get("mean", 0.0))))
+    return out
+
+
+def serving_table(report: dict) -> str:
+    """Markdown table: where a serving run's modeled time went, and how
+    close its aggregate bandwidth sat to the congestion-model optimum."""
+    attr = report["attribution"]
+    btl = report["bottleneck"]
+    secs = attr.get("seconds", {})
+    total = sum(v for k, v in secs.items() if k != "unattributed")
+    lines = [
+        "| component | seconds | share |",
+        "|---|---|---|",
+    ]
+    for comp, v in secs.items():
+        if comp == "unattributed":
+            # Residual vs recorded durations (wall clocks): not a share
+            # of the modeled decomposition.
+            if v:
+                lines.append(f"| {comp} | {v:.6g} | (residual) |")
+            continue
+        share = f"{v / total:.1%}" if total else "-"
+        lines.append(f"| {comp} | {v:.6g} | {share} |")
+    util = btl.get("utilization", {})
+    labels = {k: v for k, v in btl.get("labels", {}).items() if v}
+    frac = btl.get("optimal_fraction", {})
+    lines.append("")
+    lines.append(f"steps: {attr.get('steps', 0)} | labels: " + (", ".join(
+        f"{k} {v}" for k, v in labels.items()) or "none"))
+    lines.append("utilization: " + ", ".join(
+        f"{cat} {u:.1%}" for cat, u in util.items()))
+    lines.append(f"bw optimality: mean {frac.get('mean', 0.0):.3f} "
+                 f"max {frac.get('max', 0.0):.3f} "
+                 f"(optimal {attr.get('optimal_bw') or btl.get('optimal_bw', 0)})")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="roofline tables from dry-run artifacts or a served "
+                    "BENCH_serving.json")
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="dry-run artifact mesh suffix to load")
+    ap.add_argument("--serving", default=None, metavar="BENCH_JSON",
+                    help="render the serving roofline from this bench "
+                         "report's attribution/bottleneck blocks instead "
+                         "of the dry-run artifacts")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when no input rows are found "
+                         "(missing/empty artifact dir or a report without "
+                         "attribution) instead of printing an empty table")
+    args = ap.parse_args(argv)
+    if args.serving:
+        with open(args.serving) as fh:
+            report = json.load(fh)
+        try:
+            print(serving_table(report))
+        except (KeyError, ValueError):
+            print(f"no attribution blocks in {args.serving} — serve with "
+                  f"--attribution", file=sys.stderr)
+            return 1 if args.strict else 0
+        return 0
+    cells = load_cells(args.mesh)
+    if not cells:
+        print(f"no artifacts found under {ART} (mesh {args.mesh!r}) — run "
+              f"repro.launch.dryrun first", file=sys.stderr)
+        return 1 if args.strict else 0
+    print(table(args.mesh))
+    return 0
+
+
 if __name__ == "__main__":
-    print(table())
+    sys.exit(main())

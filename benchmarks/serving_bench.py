@@ -220,12 +220,19 @@ def baseline_report() -> dict:
     the modeled clock.  Every gated figure (counts, modeled latencies) is
     a deterministic function of the schedule — the trace never emits EOS,
     so generated_tokens cannot drift with sampling either — which is what
-    makes a checked-in baseline meaningful across machines."""
+    makes a checked-in baseline meaningful across machines.
+
+    Served with ``--attribution`` so the baseline carries the
+    ``attribution.*`` / ``bottleneck.*`` blocks and the bandwidth
+    optimality fraction is regression-gated (modeled-clock deterministic).
+    The eager twin below stays profiler-off — the jit gate references no
+    attribution paths, and keeping one baseline unprofiled doubles as a
+    standing check that attribution-off output is unchanged."""
     from repro.launch.serve import main as serve_main
 
     return serve_main(TRACE_ARGS + [
         "--scheduler", "slo", "--trace", os.path.join(ROOT, BASELINE_TRACE),
-        "--bench-json", ""])
+        "--attribution", "--bench-json", ""])
 
 
 def eager_report() -> dict:

@@ -69,6 +69,126 @@ class ModeledClock(Clock):
         self.t += dt
 
 
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """One op's priced latency inside a modeled tick, with its binding term.
+
+    ``seconds`` is exactly ``OpProfile.latency(x, hw)`` — the max of the
+    compute time and the two tier streams — and ``bound`` names which of
+    the three terms won the max ('compute' | 'hbm' | 'host'; ties resolve
+    in that order, mirroring ``max``'s first-argument preference)."""
+
+    name: str
+    kind: str                      # "linear" (weights) | "attention" (KV)
+    phase: str                     # "decode" | "prefill"
+    seconds: float
+    bound: str                     # "compute" | "hbm" | "host"
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Decomposition of one modeled clock tick (`modeled_step_cost`).
+
+    ``total`` reproduces the scalar the clock advances by with the *exact*
+    accumulation order the pre-decomposition ``modeled_step_seconds`` used
+    — per-op left fold inside each ops group, then the five terms folded
+    in sequence — so the clock and any profiler reading the parts cannot
+    drift by even a ULP.  Terms that do not apply are exactly 0.0 (adding
+    them is a bitwise no-op)."""
+
+    decode_ops: tuple[OpCost, ...] = ()
+    kv_local: float = 0.0          # live KV read from the HBM tier
+    kv_remote: float = 0.0         # live KV read over the host link(s)
+    pool_copy: float = 0.0         # eager functional-update copy traffic
+    prefill_ops: tuple[OpCost, ...] = ()
+
+    @property
+    def total(self) -> float:
+        t = 0.0
+        t += sum(oc.seconds for oc in self.decode_ops)
+        t += self.kv_local
+        t += self.kv_remote
+        t += self.pool_copy
+        t += sum(oc.seconds for oc in self.prefill_ops)
+        return t
+
+
+def _op_costs(cfg, hw, op_ratios, wl, *, drop_attention: bool,
+              phase: str) -> tuple[OpCost, ...]:
+    from repro.core import engine as offload_engine
+
+    ops = offload_engine.enumerate_ops(cfg, wl)
+    if drop_attention:
+        ops = [op for op in ops if op.kind != "attention"]
+    out = []
+    for op in ops:
+        x = op_ratios.get(op.name, 0.0)
+        secs = op.latency(x, hw)
+        if secs == op.t_comp(hw):
+            bound = "compute"
+        elif secs == op.bytes * (1.0 - x) / hw.hbm.bandwidth:
+            bound = "hbm"
+        else:
+            bound = "host"
+        out.append(OpCost(name=op.name, kind=op.kind, phase=phase,
+                          seconds=secs, bound=bound))
+    return tuple(out)
+
+
+def modeled_step_cost(
+    cfg,
+    hw,
+    op_ratios: dict[str, float],
+    *,
+    prefill_tokens: int = 0,
+    decode_slots: int = 0,
+    mean_kv_len: float = 0.0,
+    kv_local_bytes: float = 0.0,
+    kv_remote_bytes: float = 0.0,
+    hbm_copy_bytes: float = 0.0,
+) -> StepCost:
+    """Analytical cost of one engine tick, decomposed per term.
+
+    Weights go through the paper's EB model (`core.ebmodel` per-op
+    latencies over the plan's ratios — same machinery as the adaptive
+    runtime's static-vs-adaptive accounting).  The decode KV term uses the
+    *live* page residency when the caller passes ``kv_local_bytes`` /
+    ``kv_remote_bytes`` (each tier streamed at its own bandwidth), so tier
+    demotion — preemption, migration, spills — is visible to the clock;
+    with both at zero the planner's attention ops price the KV instead.
+    ``hbm_copy_bytes`` prices functional-update copy traffic at HBM
+    bandwidth: the eager (un-jitted) decode step materializes a fresh copy
+    of each KV page pool per layer scatter, while the jitted step donates
+    the pools and writes in place (zero) — this term is what makes the
+    eager-vs-jitted throughput row a deterministic gateable figure.
+
+    ``StepCost.total`` is the modeled clock's tick; the attribution
+    profiler (`repro.obs.attribution`) records the same object, so the
+    clock and the per-step ledger share one pricing path by construction.
+    """
+    from repro.core.ebmodel import WorkloadSpec
+
+    live_kv = kv_local_bytes > 0 or kv_remote_bytes > 0
+    decode_ops: tuple[OpCost, ...] = ()
+    kv_local = kv_remote = 0.0
+    if decode_slots:
+        wl = WorkloadSpec(batch=decode_slots,
+                          seq_len=max(1, round(mean_kv_len)), phase="decode")
+        decode_ops = _op_costs(cfg, hw, op_ratios, wl,
+                               drop_attention=live_kv, phase="decode")
+        kv_local = kv_local_bytes / hw.hbm.bandwidth
+        kv_remote = kv_remote_bytes / hw.host.bandwidth
+    pool_copy = hbm_copy_bytes / hw.hbm.bandwidth if hbm_copy_bytes else 0.0
+    prefill_ops: tuple[OpCost, ...] = ()
+    if prefill_tokens:
+        wl = WorkloadSpec(batch=1, seq_len=prefill_tokens, phase="prefill")
+        prefill_ops = _op_costs(cfg, hw, op_ratios, wl,
+                                drop_attention=False, phase="prefill")
+    return StepCost(decode_ops=decode_ops, kv_local=kv_local,
+                    kv_remote=kv_remote, pool_copy=pool_copy,
+                    prefill_ops=prefill_ops)
+
+
 def modeled_step_seconds(
     cfg,
     hw,
@@ -83,40 +203,14 @@ def modeled_step_seconds(
 ) -> float:
     """Analytical latency of one engine step (the modeled clock's tick).
 
-    Weights go through the paper's EB model (`core.ebmodel.total_latency`
-    over the plan's per-op ratios — same machinery as the adaptive
-    runtime's static-vs-adaptive accounting).  The decode KV term uses the
-    *live* page residency when the caller passes ``kv_local_bytes`` /
-    ``kv_remote_bytes`` (each tier streamed at its own bandwidth), so tier
-    demotion — preemption, migration, spills — is visible to the clock;
-    with both at zero the planner's attention ops price the KV instead.
-    ``hbm_copy_bytes`` prices functional-update copy traffic at HBM
-    bandwidth: the eager (un-jitted) decode step materializes a fresh copy
-    of each KV page pool per layer scatter, while the jitted step donates
-    the pools and writes in place (zero) — this term is what makes the
-    eager-vs-jitted throughput row a deterministic gateable figure.
-    """
-    from repro.core import engine as offload_engine
-    from repro.core.ebmodel import WorkloadSpec, total_latency
-
-    t = 0.0
-    live_kv = kv_local_bytes > 0 or kv_remote_bytes > 0
-    if decode_slots:
-        wl = WorkloadSpec(batch=decode_slots,
-                          seq_len=max(1, round(mean_kv_len)), phase="decode")
-        ops = offload_engine.enumerate_ops(cfg, wl)
-        if live_kv:
-            ops = [op for op in ops if op.kind != "attention"]
-        t += total_latency(ops, [op_ratios.get(op.name, 0.0) for op in ops], hw)
-        t += kv_local_bytes / hw.hbm.bandwidth
-        t += kv_remote_bytes / hw.host.bandwidth
-    if hbm_copy_bytes:
-        t += hbm_copy_bytes / hw.hbm.bandwidth
-    if prefill_tokens:
-        wl = WorkloadSpec(batch=1, seq_len=prefill_tokens, phase="prefill")
-        ops = offload_engine.enumerate_ops(cfg, wl)
-        t += total_latency(ops, [op_ratios.get(op.name, 0.0) for op in ops], hw)
-    return t
+    Thin wrapper over :func:`modeled_step_cost` — the scalar is the
+    decomposition's ``total``, so the clock and the attribution ledger
+    can never disagree about what a step cost."""
+    return modeled_step_cost(
+        cfg, hw, op_ratios,
+        prefill_tokens=prefill_tokens, decode_slots=decode_slots,
+        mean_kv_len=mean_kv_len, kv_local_bytes=kv_local_bytes,
+        kv_remote_bytes=kv_remote_bytes, hbm_copy_bytes=hbm_copy_bytes).total
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,17 @@ from repro.obs.trace import ChromeTraceRecorder
 from repro.serving.engine import Request, ServingEngine
 
 
+def _write_atomic(path: str, text: str) -> None:
+    """Write ``text`` to ``path`` via a same-directory tmp file +
+    ``os.replace`` so concurrent readers always see a complete file."""
+    import os
+
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as fh:
+        fh.write(text)
+    os.replace(tmp, path)
+
+
 def _bench_registry(args, engine: ServingEngine, stats, wall: float):
     """The metrics registry behind one serving run's report (the single
     producer of the BENCH stats block and the Prometheus exposition)."""
@@ -143,6 +154,16 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the Prometheus text exposition of the "
                          "run's metrics registry")
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="with --metrics-out: also rewrite the file every N "
+                         "engine steps (atomic tmp-file rename, so a scraper "
+                         "never reads a torn file); 0 = end-of-run only")
+    ap.add_argument("--attribution", action="store_true",
+                    help="attach the bandwidth-attribution profiler "
+                         "(repro.obs.attribution): per-step time ledger, "
+                         "bottleneck labels, achieved-vs-optimal aggregate "
+                         "bandwidth — adds attribution.*/bottleneck.* to the "
+                         "bench report and trace")
     ap.add_argument("--flight-dir", default=None, metavar="DIR",
                     help="attach the flight recorder: keep a bounded ring "
                          "of per-step state snapshots and dump a "
@@ -238,6 +259,10 @@ def main(argv: list[str] | None = None) -> dict:
                   f"from {args.autotune_cache} (hw={tuner.hw.name})")
         else:
             tuner = Autotuner(sweep=args.autotune)
+    profiler = None
+    if args.attribution:
+        from repro.obs.attribution import AttributionProfiler
+        profiler = AttributionProfiler()
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         hbm_budget_bytes=args.hbm_gb * 1e9 if args.hbm_gb is not None else None,
@@ -248,7 +273,7 @@ def main(argv: list[str] | None = None) -> dict:
         clock=ModeledClock() if trace is not None else None,
         check_invariants=args.check_invariants,
         recorder=recorder, flight=flight,
-        jit_step=not args.no_jit, tuner=tuner)
+        jit_step=not args.no_jit, tuner=tuner, profiler=profiler)
     if shrink is not None:
         engine.schedule_hbm_shrink(*shrink)
         print(f"chaos: HBM shrink to {shrink[1]:.0%} of the local pool "
@@ -288,7 +313,20 @@ def main(argv: list[str] | None = None) -> dict:
                 max_new_tokens=args.new_tokens)
             submitted.append(req)
             engine.submit(req)
-    stats = engine.run()
+    step_hook = None
+    if args.metrics_out and args.metrics_interval > 0:
+        # Periodic Prometheus flush for long runs: rebuild the registry
+        # from the live engine state every N steps and rename it into
+        # place atomically, so a scraper never reads a torn file.
+        # Interval 0 leaves the single end-of-run write untouched.
+        def step_hook(steps: int) -> None:
+            if steps % args.metrics_interval:
+                return
+            flush_reg = _bench_registry(args, engine, engine.stats,
+                                        time.time() - t0)
+            _write_atomic(args.metrics_out, flush_reg.to_prometheus())
+
+    stats = engine.run(step_hook=step_hook)
     wall = time.time() - t0
     print(f"served {stats.served} requests in {wall:.2f}s | "
           f"decode steps {stats.decode_steps} | TPOT {stats.tpot*1e3:.1f} ms | "
@@ -330,6 +368,15 @@ def main(argv: list[str] | None = None) -> dict:
               f"modeled tokens/s static {mod['static_tokens_per_s']:.3g} "
               f"adaptive {mod['adaptive_tokens_per_s']:.3g} "
               f"(gain {mod['gain']:.3f})")
+
+    if profiler is not None:
+        prep = profiler.report()
+        btl = prep["bottleneck"]
+        fr = btl["optimal_fraction"]
+        labels = ", ".join(f"{k} {v}" for k, v in btl["labels"].items() if v)
+        print(f"attribution: {prep['steps']} steps | labels: {labels or 'none'}"
+              f" | transitions {btl['transitions']} | bw optimality "
+              f"mean {fr['mean']:.3f} max {fr['max']:.3f}")
 
     reg = _bench_registry(args, engine, stats, wall)
     report = bench_report(args, engine, stats, wall, reg=reg)

@@ -8,8 +8,25 @@
 * :mod:`repro.obs.flight` — flight recorder: last-N-steps state ring
   dumped as a post-mortem bundle on invariant violations, crashes, or
   SLO breaches;
-* ``python -m repro.obs`` — summarize / validate / convert tooling.
+* :mod:`repro.obs.attribution` / :mod:`repro.obs.bottleneck` — per-step
+  time/byte ledger over the modeled cost decomposition, bottleneck
+  labels, and the achieved-vs-optimal aggregate-bandwidth audit;
+* ``python -m repro.obs`` — summarize / validate / convert / bottleneck
+  tooling.
 """
+from repro.obs.attribution import (
+    COMPONENTS,
+    NULL_PROFILER,
+    AttributionProfiler,
+    StepLedger,
+)
+from repro.obs.bottleneck import (
+    BottleneckAuditor,
+    label_components,
+    optimality_fraction,
+    report_from_bench,
+    report_from_trace,
+)
 from repro.obs.flight import FlightRecorder, load_bundle, summarize_bundle
 from repro.obs.metrics import (
     BENCH_SCHEMA_VERSION,
@@ -30,16 +47,25 @@ from repro.obs.trace import (
 
 __all__ = [
     "BENCH_SCHEMA_VERSION",
+    "COMPONENTS",
+    "AttributionProfiler",
+    "BottleneckAuditor",
     "ChromeTraceRecorder",
     "Counter",
     "FlightRecorder",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "NULL_PROFILER",
     "NULL_RECORDER",
+    "StepLedger",
     "TraceRecorder",
+    "label_components",
     "load_bundle",
+    "optimality_fraction",
     "provenance",
+    "report_from_bench",
+    "report_from_trace",
     "serving_registry",
     "summarize_bundle",
     "summarize_trace",

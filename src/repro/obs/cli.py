@@ -9,7 +9,11 @@ Subcommands:
   (``docs/observability.md``); non-zero exit on any problem (the CI
   obs-smoke gate);
 * ``convert BUNDLE -o OUT`` — extract a flight bundle's trace tail into a
-  standalone Perfetto-loadable trace file.
+  standalone Perfetto-loadable trace file;
+* ``bottleneck PATH`` — per-step bandwidth attribution report from a
+  traced run (top-K most expensive steps with their dominant term) or the
+  aggregate blocks of a ``BENCH_serving.json`` (runs served with
+  ``--attribution``).
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import argparse
 import json
 import sys
 
+from repro.obs import bottleneck as bottleneck_mod
 from repro.obs import flight as flight_mod
 from repro.obs import trace as trace_mod
 
@@ -54,6 +59,35 @@ def cmd_validate(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_bottleneck(args: argparse.Namespace) -> int:
+    doc = _load(args.path)
+    try:
+        if "traceEvents" in doc:
+            rep = bottleneck_mod.report_from_trace(doc, top_k=args.top)
+        elif _is_bundle(doc):
+            # Post-mortem: the last snapshot carries the at-failure ledger.
+            snap = (doc.get("snapshots") or [{}])[-1]
+            attr = snap.get("attribution")
+            if not attr:
+                print(f"{args.path}: bundle snapshots carry no attribution "
+                      f"(was the run served with --attribution?)",
+                      file=sys.stderr)
+                return 1
+            print(f"at-failure attribution (step {attr.get('step')}, "
+                  f"label {attr.get('label')}, bw optimality "
+                  f"{attr.get('optimal_fraction', 0.0):.3f}):")
+            for comp, secs in attr.get("components", {}).items():
+                print(f"  {comp:<20s} {secs:12.6f}s")
+            return 0
+        else:
+            rep = bottleneck_mod.report_from_bench(doc)
+    except ValueError as e:
+        print(f"{args.path}: {e}", file=sys.stderr)
+        return 1
+    print(bottleneck_mod.format_report(rep))
+    return 0
+
+
 def cmd_convert(args: argparse.Namespace) -> int:
     bundle = flight_mod.load_bundle(args.path)
     tail = bundle.get("trace_tail")
@@ -80,6 +114,13 @@ def main(argv: list[str] | None = None) -> int:
     p = sub.add_parser("validate", help="validate a trace against the schema")
     p.add_argument("path")
     p.set_defaults(fn=cmd_validate)
+    p = sub.add_parser("bottleneck",
+                       help="attribution / bottleneck report from a trace, "
+                            "bench JSON, or flight bundle")
+    p.add_argument("path")
+    p.add_argument("-k", "--top", type=int, default=5,
+                   help="most-expensive steps to list (trace input only)")
+    p.set_defaults(fn=cmd_bottleneck)
     p = sub.add_parser("convert", help="bundle trace tail -> trace JSON")
     p.add_argument("path")
     p.add_argument("-o", "--out", required=True)

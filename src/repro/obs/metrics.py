@@ -302,6 +302,12 @@ def serving_registry(engine, stats, wall: float, *,
     if getattr(engine, "tuner", None) is not None:
         reg.const("autotune", engine.tuner.counters(),
                   "autotuner table size + hit/miss/sweep counters")
+    # Attribution / bottleneck blocks: only when a profiler was attached,
+    # so profiler-off reports keep the exact pre-attribution schema
+    # (byte-identical JSON — same contract as the recorder).
+    prof = getattr(engine, "profiler", None)
+    if prof is not None and prof.enabled:
+        prof.register_metrics(reg)
     # Prometheus-only extras: latency distributions + scheduler queue flow
     # (in_json=False so the JSON schema stays frozen).
     reg.histogram("ttft_seconds", "time to first token").extend(stats.ttfts)

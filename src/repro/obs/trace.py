@@ -213,6 +213,21 @@ def summarize_trace(doc: dict[str, Any]) -> dict[str, Any]:
             instants[ev["name"]] = instants.get(ev["name"], 0) + 1
         elif ph == "C":
             counters[ev["name"]] = dict(ev.get("args", {}))
+    # Per-phase totals ("where did the time go" without loading Perfetto):
+    # prefill chunks trace as `prefill[rid]` spans, decode and admission
+    # as one span each per step.
+    phase_us = {
+        "prefill": sum(rec["total_us"] for name, rec in spans.items()
+                       if name.startswith("prefill[")),
+        "decode": spans.get("decode", {}).get("total_us", 0.0),
+        "admission": spans.get("admission", {}).get("total_us", 0.0),
+    }
+    phase_total = sum(phase_us.values())
+    phases = {
+        name: {"seconds": us / 1e6,
+               "pct": (100.0 * us / phase_total) if phase_total else 0.0}
+        for name, us in phase_us.items()
+    }
     return {
         "schema_version": doc.get("otherData", {}).get("schema_version"),
         "events": sum(1 for e in events if e.get("ph") != "M"),
@@ -220,6 +235,7 @@ def summarize_trace(doc: dict[str, Any]) -> dict[str, Any]:
         "tracks": {f"{pid}/{tid}": n for (pid, tid), n in sorted(names.items())},
         "span_us": (t_max - t_min) if t_max >= t_min else 0.0,
         "spans": spans,
+        "phases": phases,
         "instants": instants,
         "counters_final": counters,
     }

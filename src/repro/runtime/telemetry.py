@@ -64,6 +64,14 @@ class StepSample:
             return self.remote_bytes_per_link
         return (self.remote_bytes,)
 
+    @property
+    def achieved_aggregate_bw(self) -> float:
+        """Achieved aggregate bandwidth of this step (both tiers), B/s —
+        the numerator of the bottleneck auditor's optimality fraction
+        (`obs.bottleneck`, vs `core.congestion.optimal_window`)."""
+        return (self.local_bytes + self.remote_bytes) / max(self.duration_s,
+                                                            1e-12)
+
 
 def _ema(prev: float | None, value: float, alpha: float) -> float:
     return value if prev is None else alpha * value + (1.0 - alpha) * prev

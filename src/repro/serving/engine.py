@@ -85,11 +85,12 @@ from repro.frontend.metrics import (
     ModeledClock,
     RequestRecord,
     WallClock,
-    modeled_step_seconds,
+    modeled_step_cost,
     percentile,
 )
 from repro.frontend.scheduler import Scheduler, get_scheduler
 from repro.models import model as M
+from repro.obs.attribution import NULL_PROFILER
 from repro.obs.trace import (
     ENGINE,
     HEALTH_LEVEL,
@@ -282,6 +283,7 @@ class ServingEngine:
         flight=None,
         jit_step: bool = True,
         tuner: Any = None,
+        profiler=None,
     ):
         """``scheduler`` selects the serving frontend policy — a name
         ('fcfs' | 'priority' | 'slo'), a `frontend.scheduler.Scheduler`
@@ -302,7 +304,11 @@ class ServingEngine:
         the serving path is bitwise-identical with tracing off) and
         ``flight`` an `obs.flight.FlightRecorder` that keeps a bounded
         ring of per-step state snapshots and dumps a post-mortem bundle
-        when a run dies or breaches its SLO."""
+        when a run dies or breaches its SLO.  ``profiler`` is an
+        `obs.attribution.AttributionProfiler` that receives the modeled
+        per-step cost decomposition (default: the no-op null profiler —
+        attribution off is bitwise-identical, same contract as the
+        recorder)."""
         self.cfg = cfg
         self.hw = hw
         self.max_batch = max_batch
@@ -396,6 +402,12 @@ class ServingEngine:
         # the parity test in tests/test_obs.py).
         self.recorder = recorder if recorder is not None else NULL_RECORDER
         self.flight = flight
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
+        if self.profiler.enabled:
+            # The optimality-fraction denominator: the plan's converged
+            # AIMD aggregate (`core.congestion.optimal_window`).
+            self.profiler.attach(clock_kind=self.clock.kind,
+                                 optimal_bw=float(self.plan.window.aggregate_bw))
         self._slo_dumped = False
         if self.recorder.enabled:
             self._wire_observability()
@@ -826,29 +838,51 @@ class ServingEngine:
     # -- modeled clock ------------------------------------------------------
     def _clock_tick_prefill(self, n_tokens: int) -> None:
         """Advance a virtual clock by the analytical cost of one prefill
-        chunk (no-op on the wall clock), before TTFT is stamped."""
-        if not isinstance(self.clock, ModeledClock) or not n_tokens:
+        chunk (no-op on the wall clock), before TTFT is stamped.
+
+        The cost is computed once as a decomposed `StepCost`; the modeled
+        clock advances by its ``total`` and the attribution profiler
+        records the parts — one pricing path, so the clock and the ledger
+        cannot drift.  On a wall clock with the profiler attached the
+        same decomposition is recorded as a modeled *estimate* (the clock
+        itself never advances)."""
+        if not n_tokens:
             return
-        self.clock.advance(modeled_step_seconds(
-            self.cfg, self.hw, self.plan.op_ratios, prefill_tokens=n_tokens))
+        modeled = isinstance(self.clock, ModeledClock)
+        if not modeled and not self.profiler.enabled:
+            return
+        cost = modeled_step_cost(self.cfg, self.hw, self.plan.op_ratios,
+                                 prefill_tokens=n_tokens)
+        if modeled:
+            self.clock.advance(cost.total)
+        if self.profiler.enabled:
+            self.profiler.on_tick(cost)
 
     def _clock_tick_decode(self, active: np.ndarray) -> None:
         """Advance a virtual clock by the analytical cost of one decode
         step over the active slots, pricing the KV read off the *live*
         page residency — so spills, migration and tier-demotion
-        preemptions are visible to the modeled latencies."""
+        preemptions are visible to the modeled latencies.  Same
+        single-pricing-path contract as `_clock_tick_prefill`."""
         n_active = int(active.sum())
-        if not isinstance(self.clock, ModeledClock) or not n_active:
+        if not n_active:
+            return
+        modeled = isinstance(self.clock, ModeledClock)
+        if not modeled and not self.profiler.enabled:
             return
         kv_local = kv_remote = 0.0
         if self.pcache is not None:
             kv_local, kv_remote = self.pcache.attended_bytes(self.lens, active)
-        self.clock.advance(modeled_step_seconds(
+        cost = modeled_step_cost(
             self.cfg, self.hw, self.plan.op_ratios,
             decode_slots=n_active,
             mean_kv_len=float(self.lens[active].mean()),
             kv_local_bytes=kv_local, kv_remote_bytes=kv_remote,
-            hbm_copy_bytes=self._decode_copy_bytes()))
+            hbm_copy_bytes=self._decode_copy_bytes())
+        if modeled:
+            self.clock.advance(cost.total)
+        if self.profiler.enabled:
+            self.profiler.on_tick(cost)
 
     def _decode_copy_bytes(self) -> float:
         """Functional-update copy traffic of one eager decode step: without
@@ -1164,7 +1198,8 @@ class ServingEngine:
         modeled seconds on a ModeledClock replay — one time base per run,
         never mixed (trace replays used to stamp wall durations here,
         which made achieved-bandwidth figures nondeterministic noise)."""
-        if self.runtime is None and not self.recorder.enabled:
+        if (self.runtime is None and not self.recorder.enabled
+                and not self.profiler.enabled):
             return
         n_active = int(active.sum())
         # Traffic accounting: decode reads every weight once per step, each
@@ -1208,6 +1243,20 @@ class ServingEngine:
                         {"pages": sample.local_deficit})
             rec.counter(LINKS, "health", t,
                         {"level": HEALTH_LEVEL.get(self.health.state, -1)})
+        if self.profiler.enabled:
+            # Close this step's ledger (the ticks recorded by the clock
+            # hooks) and surface it on the trace: per-component seconds +
+            # bw optimality as counter tracks, label changes as instants.
+            ledger = self.profiler.close_step(sample, t_start=t_step_clock)
+            if self.recorder.enabled:
+                rec, t = self.recorder, self.clock.now()
+                rec.counter(LINKS, "attribution", t, ledger.components())
+                rec.counter(LINKS, "bw.optimal_fraction", t,
+                            {"fraction": ledger.optimal_fraction})
+                tr = self.profiler.last_transition
+                if tr is not None:
+                    rec.instant(ENGINE, 0, f"bottleneck:{tr[1]}->{tr[2]}", t,
+                                cat="bottleneck", step=tr[0])
         if self.runtime is None:
             return
         new_params = self.runtime.on_step(
@@ -1246,6 +1295,17 @@ class ServingEngine:
                 "local_deficit": self.pcache.local_deficit,
                 "spills": self.pcache.spills,
             }
+        led = self.profiler.last_ledger if self.profiler.enabled else None
+        if led is not None:
+            # At-failure decomposition: the last closed step's ledger, so a
+            # post-mortem bundle says where the dying run's time was going.
+            snap["attribution"] = {
+                "step": led.step,
+                "label": led.label,
+                "components": led.components(),
+                "unattributed_s": led.unattributed(),
+                "optimal_fraction": led.optimal_fraction,
+            }
         return snap
 
     @property
@@ -1276,7 +1336,13 @@ class ServingEngine:
             "oracle_per_link_naive": rep.traffic_no_multicast / self.n_links,
         }
 
-    def run(self, max_steps: int = 10_000) -> EngineStats:
+    def run(self, max_steps: int = 10_000, *,
+            step_hook=None) -> EngineStats:
+        """Drive the engine to completion.  ``step_hook`` (optional) is
+        called as ``step_hook(steps)`` after every engine step — the
+        driver uses it for periodic metrics flushes (`--metrics-interval`);
+        it runs inside the try so a hook failure still dumps the flight
+        ring."""
         steps = 0
         try:
             while (self.scheduler.waiting or self.prefilling
@@ -1284,6 +1350,8 @@ class ServingEngine:
                           for r in self.active)) and steps < max_steps:
                 self.step()
                 steps += 1
+                if step_hook is not None:
+                    step_hook(steps)
         except Exception as e:
             # Post-mortem: dump the flight ring (plus a snapshot of the
             # state the failing step left behind) before surfacing.

@@ -1,0 +1,426 @@
+"""Bandwidth attribution & bottleneck profiler.
+
+The load-bearing property is the **exactness contract**: on a
+modeled-clock replay every step's ledger replays the clock arithmetic,
+so ``attributed_seconds() == duration_s`` *bitwise* and the residual is
+exactly 0.0 — pinned here across model families × offload ratios (and
+mesh widths on a multi-device platform).  On top of that: bottleneck
+labels are pinned on constructed workloads, the optimality fraction is
+≈1.0 at the AIMD-converged window on the analytical congestion model,
+attribution-off runs stay bitwise-identical, and the trace counters /
+CLI / roofline / periodic-metrics plumbing round-trips.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import congestion
+from repro.core.hardware import TPU_V5E
+from repro.frontend.metrics import (
+    ModeledClock,
+    OpCost,
+    StepCost,
+    modeled_step_cost,
+    modeled_step_seconds,
+)
+from repro.models import model as M
+from repro.obs.attribution import (
+    COMPONENTS,
+    NULL_PROFILER,
+    AttributionProfiler,
+    StepLedger,
+)
+from repro.obs.bottleneck import (
+    CATEGORIES,
+    LABELS,
+    BottleneckAuditor,
+    label_components,
+    optimality_fraction,
+    report_from_bench,
+    report_from_trace,
+)
+from repro.obs.cli import main as obs_main
+from repro.obs.metrics import serving_registry
+from repro.obs.trace import ChromeTraceRecorder, summarize_trace, validate_trace
+from repro.runtime.controller import AIMDController
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# One family per cache layout: dense paged KV, MoE routed weights,
+# SSM state (no page pools).
+FAMILIES = ("llama2_7b", "qwen3_moe_30b_a3b", "mamba2_370m")
+
+
+@functools.lru_cache(maxsize=None)
+def _model(arch):
+    cfg = C.get_smoke(arch)
+    return cfg, M.init_params(cfg, KEY)
+
+
+def _serve(arch, ratio, profiler=None, mesh=None, **kw):
+    """Deterministic modeled-clock run with every emission site live."""
+    cfg, params = _model(arch)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                        global_offload_ratio=ratio, page_size=4,
+                        scheduler="slo", prefill_chunk=4, adaptive=True,
+                        clock=ModeledClock(), mesh=mesh,
+                        profiler=profiler, **kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=3, slo_ttft_s=0.5)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return eng, stats, reqs
+
+
+def _check_identity(prof):
+    """The exactness contract over one profiled modeled-clock run."""
+    assert prof.steps > 0
+    busy = [led for led in prof.ledgers if led.ticks]
+    assert busy, "run produced no priced steps"
+    for led in prof.ledgers:
+        assert led.clock_kind == "modeled"
+        if not led.ticks:
+            continue                      # idle step: duration is the floor
+        # Bitwise: the replay *is* the sequence of additions the clock did.
+        assert led.attributed_seconds() == led.duration_s
+        assert led.unattributed() == 0.0
+        comps = led.components()
+        assert comps["unattributed"] == 0.0
+        assert comps["ici_broadcast"] == 0.0      # reserved (overlapped)
+        # Bucket aggregation re-associates floats: ULP-level only.
+        bucket_sum = sum(v for k, v in comps.items() if k != "unattributed")
+        assert math.isclose(bucket_sum, led.duration_s, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Exact attribution identity: families × offload ratios (× mesh below)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ratio", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_attribution_identity_exact(arch, ratio):
+    prof = AttributionProfiler()
+    eng, _, reqs = _serve(arch, ratio, profiler=prof)
+    assert all(len(r.out_tokens) == 3 for r in reqs)
+    assert prof.optimal_bw == float(eng.plan.window.aggregate_bw)
+    _check_identity(prof)
+    if ratio == 0.0:
+        # Nothing offloaded: no host-link traffic to attribute.
+        assert prof.totals["kv_remote_link"] == 0.0
+        assert prof.totals["weight_remote_link"] == 0.0
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 devices (XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+def test_attribution_identity_mesh():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("model",))
+    prof = AttributionProfiler()
+    _serve("llama2_7b", 0.5, profiler=prof, mesh=mesh)
+    _check_identity(prof)
+    linked = [led for led in prof.ledgers if led.link_fractions is not None]
+    assert linked, "mesh run recorded no per-link byte split"
+    assert all(len(led.link_fractions) == 4 for led in linked)
+
+
+def test_step_cost_total_matches_scalar_path():
+    """The refactored decomposition and the scalar clock share one
+    pricing path: `modeled_step_seconds` is exactly `.total`."""
+    eng, _, _ = _serve("llama2_7b", 0.5)
+    for kw in (
+        dict(decode_slots=2, mean_kv_len=16.0, kv_local_bytes=3e6,
+             kv_remote_bytes=5e6, hbm_copy_bytes=1e5),
+        dict(prefill_tokens=12),
+        dict(prefill_tokens=4, decode_slots=1, mean_kv_len=8.0),
+        dict(),
+    ):
+        cost = modeled_step_cost(eng.cfg, eng.hw, eng.plan.op_ratios, **kw)
+        assert cost.total == modeled_step_seconds(
+            eng.cfg, eng.hw, eng.plan.op_ratios, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pinned bottleneck labels on constructed workloads
+# ---------------------------------------------------------------------------
+_COMP_OP = OpCost("mlp", "linear", "decode", 2.0, "compute")
+_PREFILL_OP = OpCost("qkv", "linear", "prefill", 2.0, "compute")
+_HOST_OP = OpCost("mlp", "linear", "decode", 2.0, "host")
+_HBM_OP = OpCost("attn", "attention", "decode", 2.0, "hbm")
+
+
+def _ledger(ticks, step=0):
+    led = StepLedger(step=step, t_start=0.0, duration_s=0.0,
+                     ticks=tuple(ticks), clock_kind="modeled")
+    led.duration_s = led.attributed_seconds()
+    return led
+
+
+def test_bottleneck_labels_pinned():
+    cases = [
+        ([StepCost(decode_ops=(_COMP_OP,))], "compute"),
+        ([StepCost(prefill_ops=(_PREFILL_OP,))], "compute"),
+        ([StepCost(decode_ops=(_COMP_OP,), kv_remote=5.0)], "host_link"),
+        ([StepCost(decode_ops=(_HOST_OP,))], "host_link"),
+        ([StepCost(kv_local=2.0, pool_copy=2.0, kv_remote=3.0)], "hbm"),
+        ([StepCost(decode_ops=(_HBM_OP,))], "hbm"),
+        ([], "idle"),
+    ]
+    for ticks, want in cases:
+        led = _ledger(ticks)
+        assert label_components(led.components()) == want, (ticks, want)
+    # Exact tie breaks toward CATEGORIES order (compute first).
+    assert label_components({"decode_compute": 1.0,
+                             "kv_remote_link": 1.0}) == "compute"
+    assert label_components({"kv_local_hbm": 1.0,
+                             "weight_remote_link": 1.0}) == "hbm"
+
+
+def test_op_bucket_taxonomy():
+    from repro.obs.attribution import op_bucket
+    assert op_bucket(_PREFILL_OP) == "prefill_compute"
+    assert op_bucket(_COMP_OP) == "decode_compute"
+    assert op_bucket(_HOST_OP) == "weight_remote_link"
+    assert op_bucket(_HBM_OP) == "kv_local_hbm"
+    assert op_bucket(OpCost("a", "attention", "decode", 1.0, "host")) \
+        == "kv_remote_link"
+    assert op_bucket(OpCost("l", "linear", "decode", 1.0, "hbm")) \
+        == "weight_local_hbm"
+
+
+def test_auditor_transitions_and_utilization():
+    aud = BottleneckAuditor()
+    label, prev = aud.observe(_ledger([StepCost(decode_ops=(_COMP_OP,))]))
+    assert (label, prev) == ("compute", None)
+    label, prev = aud.observe(_ledger([StepCost(kv_remote=9.0)], step=1))
+    assert (label, prev) == ("host_link", "compute")
+    label, prev = aud.observe(_ledger([StepCost(kv_remote=9.0)], step=2))
+    assert (label, prev) == ("host_link", "host_link")
+    assert aud.transitions == [(1, "compute", "host_link")]
+    assert aud.labels["compute"] == 1 and aud.labels["host_link"] == 2
+    util = aud.utilization()
+    assert math.isclose(sum(util.values()), 1.0)
+    rep = aud.report()
+    assert rep["steps"] == 3 and rep["transitions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Optimality fraction: ≈1.0 at the AIMD-converged window
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("streams,chunk_kb", [(1, 64), (4, 256)])
+def test_optimality_fraction_converged_aimd(streams, chunk_kb):
+    model = congestion.CongestionModel(TPU_V5E)
+    chunk = chunk_kb * 1024
+    plan = congestion.optimal_window(model, streams, chunk, max_window=256)
+    if plan.n_inflight > 120:
+        pytest.skip("optimal window clamps at the search-range edge")
+    src = congestion.ModelSource(model, streams, chunk)
+    ctrl = AIMDController(window=1, host_bw_limit=model.hw.host.bandwidth,
+                          rtt=model.rtt, n_streams=streams,
+                          chunk_bytes=chunk, max_window=256)
+    for _ in range(400):
+        ctrl.update(src.measure(ctrl.window))
+    assert ctrl.converged
+    frac = optimality_fraction(src.measure(ctrl.window).aggregate,
+                               plan.aggregate_bw)
+    assert frac == pytest.approx(1.0, rel=0.05)
+
+
+def test_optimality_fraction_edge_cases():
+    assert optimality_fraction(1e9, None) == 0.0
+    assert optimality_fraction(1e9, 0.0) == 0.0
+    assert optimality_fraction(5.0, 10.0) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Attribution off == bitwise identical (NULL profiler default)
+# ---------------------------------------------------------------------------
+def _registry(eng, stats):
+    return serving_registry(eng, stats, 1.0, meta={
+        "arch": "llama2_7b", "smoke": True, "adaptive": True,
+        "trace": None, "requests": 3})
+
+
+def test_attribution_off_is_bitwise_neutral():
+    eng_off, stats_off, reqs_off = _serve("llama2_7b", 0.5)
+    assert eng_off.profiler is NULL_PROFILER
+    prof = AttributionProfiler()
+    eng_on, stats_on, reqs_on = _serve("llama2_7b", 0.5, profiler=prof)
+    assert [r.out_tokens for r in reqs_on] == [r.out_tokens for r in reqs_off]
+    rep_off = _registry(eng_off, stats_off).nested()
+    rep_on = _registry(eng_on, stats_on).nested()
+    rep_off.pop("tpot_ms")      # wall-measured; the only noisy field
+    rep_on.pop("tpot_ms")
+    # Profiler-on adds exactly the attribution/bottleneck blocks; removing
+    # them must recover the profiler-off report byte-for-byte, key order
+    # included.
+    for key in ("attribution", "bottleneck"):
+        assert key in rep_on and key not in rep_off
+        rep_on.pop(key)
+    assert rep_on == rep_off
+    assert list(rep_on) == list(rep_off)
+
+
+def test_null_profiler_is_safe_and_disabled():
+    assert not NULL_PROFILER.enabled
+    NULL_PROFILER.attach(clock_kind="modeled", optimal_bw=1.0)
+    NULL_PROFILER.on_tick(StepCost())
+    assert NULL_PROFILER.close_step(None, t_start=0.0) is None
+    assert NULL_PROFILER.report() == {}
+    assert NULL_PROFILER.last_ledger is None
+
+
+# ---------------------------------------------------------------------------
+# Trace counters, CLI round-trip, flight snapshot, summarize phases
+# ---------------------------------------------------------------------------
+def test_trace_counters_and_cli_roundtrip(tmp_path, capsys):
+    prof = AttributionProfiler()
+    rec = ChromeTraceRecorder()
+    _, _, _ = _serve("llama2_7b", 0.5, profiler=prof, recorder=rec)
+    path = tmp_path / "trace.json"
+    rec.save(str(path))
+    doc = json.loads(path.read_text())
+    assert validate_trace(doc) == []
+    names = {ev.get("name") for ev in doc["traceEvents"]
+             if ev.get("ph") == "C"}
+    assert {"attribution", "bw.optimal_fraction"} <= names
+
+    rep = report_from_trace(doc, top_k=3)
+    assert rep["steps"] == prof.steps
+    assert 0 < len(rep["top"]) <= 3
+    for comp in COMPONENTS:
+        assert rep["seconds"][comp] == pytest.approx(
+            prof.totals[comp], rel=1e-12, abs=1e-15)
+    assert rep["optimal_fraction"]["mean"] == pytest.approx(
+        prof.auditor.fraction_stats()["mean"], rel=1e-12)
+
+    assert obs_main(["bottleneck", str(path), "-k", "3"]) == 0
+    out = capsys.readouterr().out
+    assert "bottleneck report" in out and "most expensive steps" in out
+
+    summ = summarize_trace(doc)
+    assert set(summ["phases"]) == {"prefill", "decode", "admission"}
+    assert sum(p["pct"] for p in summ["phases"].values()) \
+        == pytest.approx(100.0)
+    assert all(p["seconds"] >= 0.0 for p in summ["phases"].values())
+
+
+def test_report_from_trace_requires_attribution_track(capsys):
+    with pytest.raises(ValueError, match="no 'attribution' counter track"):
+        report_from_trace({"traceEvents": []})
+    with pytest.raises(ValueError, match="no attribution/bottleneck"):
+        report_from_bench({"served": 1})
+
+
+def test_bench_report_cli(tmp_path, capsys):
+    prof = AttributionProfiler()
+    eng, stats, _ = _serve("llama2_7b", 0.5, profiler=prof)
+    report = _registry(eng, stats).nested()
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(report))
+    assert obs_main(["bottleneck", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "bottleneck report (bench)" in out
+    # And a report without the blocks is a clean error, not a traceback.
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"served": 1}))
+    assert obs_main(["bottleneck", str(bare)]) == 1
+
+
+def test_flight_snapshot_has_attribution(tmp_path):
+    from repro.obs.flight import FlightRecorder
+    prof = AttributionProfiler()
+    eng, _, _ = _serve("llama2_7b", 0.5, profiler=prof,
+                       flight=FlightRecorder(str(tmp_path / "flight")))
+    snap = eng._flight_snapshot()
+    attr = snap["attribution"]
+    assert attr["label"] in LABELS
+    assert set(attr["components"]) == set(COMPONENTS)
+    assert attr["unattributed_s"] == 0.0        # modeled clock: exact
+    assert attr["optimal_fraction"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Roofline --strict and the serving table
+# ---------------------------------------------------------------------------
+def _bench_mods():
+    if ROOT not in sys.path:
+        sys.path.insert(0, ROOT)
+    import benchmarks.roofline as roofline
+    return roofline
+
+
+def test_roofline_strict_missing_artifacts(tmp_path, monkeypatch, capsys):
+    roofline = _bench_mods()
+    monkeypatch.setattr(roofline, "ART", tmp_path / "missing")
+    assert roofline.main([]) == 0               # default: warn, empty, 0
+    assert roofline.main(["--strict"]) == 1     # CI mode: hard error
+    err = capsys.readouterr().err
+    assert "no artifacts found" in err
+    assert str(tmp_path / "missing") in err
+
+
+def test_roofline_serving_table(tmp_path, capsys):
+    roofline = _bench_mods()
+    prof = AttributionProfiler()
+    eng, stats, _ = _serve("llama2_7b", 0.5, profiler=prof)
+    report = _registry(eng, stats).nested()
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(report))
+    assert roofline.main(["--serving", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "bw optimality" in out
+    rows = roofline.serving_rows(report)
+    assert any(name == "serving.bw.optimal_fraction.mean"
+               for name, _, _ in rows)
+    shares = [share for name, _, share in rows
+              if name.startswith("serving.attribution.")
+              and not name.endswith("unattributed")]
+    assert sum(shares) == pytest.approx(1.0, abs=0.01)
+    # No attribution blocks: --strict fails, default passes with a warning.
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"served": 1}))
+    assert roofline.main(["--serving", str(bare)]) == 0
+    assert roofline.main(["--serving", str(bare), "--strict"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Periodic Prometheus flush (--metrics-interval)
+# ---------------------------------------------------------------------------
+def test_write_atomic(tmp_path):
+    from repro.launch.serve import _write_atomic
+    path = tmp_path / "m.prom"
+    _write_atomic(str(path), "one\n")
+    _write_atomic(str(path), "two\n")
+    assert path.read_text() == "two\n"
+    assert not list(tmp_path.glob("*.tmp.*"))   # tmp files always renamed
+
+
+def test_metrics_interval_periodic_flush(tmp_path):
+    from repro.launch.serve import main as serve_main
+    out = tmp_path / "metrics.prom"
+    serve_main(["--smoke", "--requests", "2", "--prompt-len", "8",
+                "--new-tokens", "3", "--max-batch", "2", "--max-len", "32",
+                "--no-kernels", "--attribution",
+                "--metrics-out", str(out), "--metrics-interval", "2",
+                "--bench-json", str(tmp_path / "bench.json")])
+    text = out.read_text()
+    assert "dak_attribution_steps" in text
+    assert "dak_bottleneck_optimal_fraction_mean" in text
+    assert not list(tmp_path.glob("*.tmp.*"))
+    report = json.loads((tmp_path / "bench.json").read_text())
+    assert report["attribution"]["steps"] > 0
+    assert report["bottleneck"]["labels"]
